@@ -1,0 +1,28 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+
+def bench_rounds() -> int:
+    """Paper uses 40 rounds for the Z-tests; default lower for CI speed."""
+    return int(os.environ.get("REPRO_BENCH_ROUNDS", "8"))
+
+
+def timeit(fn, *args, repeat: int = 3):
+    """Median wall time (s) of fn(*args) after one warmup."""
+    fn(*args)
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """One CSV row: name, us_per_call, derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

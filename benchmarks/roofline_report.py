@@ -1,0 +1,53 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline markdown table."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records() -> list[dict]:
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def fmt_table(recs: list[dict], mesh: str = "pod16x16") -> str:
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+           "mem/dev | useful-FLOP frac | note |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — "
+                         f"| SKIP: {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — "
+                         f"| FAIL: {r.get('error', '')[:60]} |")
+            continue
+        ro = r["roofline"]
+        frac = ro.get("useful_flop_frac", 0.0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['t_compute_s']:.3e} | "
+            f"{ro['t_memory_s']:.3e} | {ro['t_collective_s']:.3e} | "
+            f"**{ro['bottleneck']}** | {ro['mem_per_dev_gib']:.2f} GiB | "
+            f"{frac:.2f} | |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    recs = load_records()
+    print(fmt_table(recs))
+    ok = sum(r["status"] == "ok" for r in recs)
+    print(f"\n{ok} ok / {sum(r['status'] == 'skip' for r in recs)} skip / "
+          f"{sum(r['status'] == 'fail' for r in recs)} fail "
+          f"of {len(recs)} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Control cost with
+REPRO_BENCH_ROUNDS (paper uses 40 rounds for Table 1's Z-tests; default 8)
+and REPRO_BENCH_FAST=1 (skips the slower Table 1 datasets).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    from benchmarks import (binning_ablation, comm_complexity, fig3_domains,
+                            fig456_prediction, kernel_bench, table1_parity)
+
+    if os.environ.get("REPRO_BENCH_FAST"):
+        table1_parity.BENCH_SETS = ["ionosphere", "spambase", "waveform",
+                                    "superconduct"]
+    table1_parity.run()
+    fig3_domains.run()
+    fig456_prediction.run()
+    comm_complexity.run()
+    binning_ablation.run()
+    kernel_bench.run()
+    print(f"# total_bench_wall_s={time.time() - t0:.1f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""End-to-end driver: train a ~100M-param transformer for a few hundred steps.
+
+Uses the same train_step / optimizer / data pipeline the production launcher
+lowers for the 512-chip dry-run — just at CPU-tractable scale (internlm2
+family, trimmed to ~100M params).
+
+Run:  PYTHONPATH=src python examples/train_transformer.py [--steps 200]
+"""
+import argparse
+
+from repro.configs import registry
+from repro.launch.train import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--tiny", action="store_true",
+                    help="~10M-param smoke variant (fast CI validation)")
+    args = ap.parse_args()
+
+    # ~100M-param variant of the internlm2 family (16L·640d ≈ 103M params
+    # with its 92k vocab embedding); --tiny shrinks it ~10x for CI
+    cfg = registry.get(args.arch).with_(
+        n_layers=16, d_model=640, n_heads=8, n_kv_heads=4, d_head=80,
+        d_ff=1792, dtype="float32", remat="none")
+    if args.tiny:
+        cfg = cfg.with_(n_layers=4, d_model=256, d_head=32, d_ff=512,
+                        vocab=4096)
+
+    _, losses = train_loop(cfg, steps=args.steps, batch=8, seq=128,
+                           lr=6e-4, log_every=10)
+    print(f"cross-entropy: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'improved' if losses[-1] < losses[0] else 'DID NOT IMPROVE'})")
+
+
+if __name__ == "__main__":
+    main()

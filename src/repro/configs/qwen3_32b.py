@@ -1,0 +1,20 @@
+"""qwen3-32b [dense] — qk_norm, GQA [hf:Qwen/Qwen3-8B family, 32B scale].
+
+64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936. head_dim=128
+(explicit in the Qwen3 model card; 64·128 != d_model on purpose).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-32b",
+    arch_type="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=25600,
+    vocab=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+)

@@ -1,0 +1,72 @@
+"""Privacy layer (paper §4.3) — simulation-grade, same trust model as the paper.
+
+The paper's own mechanisms are deliberately lightweight (MD5-hashed IDs,
+"encrypted" labels shared to every client, RSA/AES on the wire).  We mirror
+that model honestly rather than pretend at MPC:
+
+  * sample IDs: salted SHA-256 (MD5 is broken; same role, stronger hash) —
+    alignment happens on hashed IDs only;
+  * labels: class-id permutation "encoding" for classification (training is
+    invariant to it), affine masking for regression targets (variance-based
+    split gains are invariant to affine maps of y);
+  * feature names: random integer encoding (the master only ever sees encoded
+    ids — our ``feat_gid``);
+  * gains in transit: additive masks that cancel under the all-reduce, so the
+    aggregate argmax input is exact while any single message is masked.
+
+None of this is semantically-secure MPC — neither is the paper's. The point
+is that the *information flow* matches §4.3: raw features never leave a
+party; the master sees only encoded ids and masked statistics.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+
+def hash_ids(ids, salt: str = "repro-ff") -> np.ndarray:
+    """Irreversible sample-ID encryption for alignment (paper: MD5)."""
+    out = [hashlib.sha256(f"{salt}:{i}".encode()).hexdigest() for i in ids]
+    return np.asarray(out)
+
+
+def align_ids(hashed_a: np.ndarray, hashed_b: np.ndarray):
+    """Private-set-intersection stand-in: positions of the common hashed IDs."""
+    common = np.intersect1d(hashed_a, hashed_b)
+    ia = {h: i for i, h in enumerate(hashed_a)}
+    ib = {h: i for i, h in enumerate(hashed_b)}
+    return (np.array([ia[h] for h in common], dtype=np.int64),
+            np.array([ib[h] for h in common], dtype=np.int64))
+
+
+def encode_labels(y: np.ndarray, n_classes: int, seed: int = 0):
+    """Permute class ids: clients train on encoded labels (classification is
+    invariant); only the label owner can decode. Returns (y_enc, decode)."""
+    perm = np.random.default_rng(seed).permutation(n_classes)
+    inv = np.argsort(perm)
+    return perm[y.astype(np.int64)], lambda y_enc: inv[np.asarray(y_enc, dtype=np.int64)]
+
+
+def mask_regression_targets(y: np.ndarray, seed: int = 0):
+    """Affine mask a*y + b (a>0): SSE split gains scale by a^2, so the argmax
+    split — hence the tree — is unchanged; leaf values decode affinely."""
+    rng = np.random.default_rng(seed)
+    a = float(rng.uniform(0.5, 2.0))
+    b = float(rng.normal())
+    return a * y + b, lambda p: (np.asarray(p) - b) / a
+
+
+def encode_feature_names(names: list[str], seed: int = 0) -> dict[str, int]:
+    """Random integer encoding of feature names (master sees only these)."""
+    perm = np.random.default_rng(seed).permutation(len(names))
+    return {n: int(e) for n, e in zip(names, perm)}
+
+
+def pairwise_cancelling_masks(n_parties: int, shape, seed: int = 0) -> np.ndarray:
+    """(M, *shape) float32 masks with sum_i mask_i == 0: adding mask_i to party
+    i's message hides it point-to-point while psum recovers the exact sum."""
+    rng = np.random.default_rng(seed)
+    m = rng.normal(size=(n_parties, *shape)).astype(np.float32)
+    m[-1] = -m[:-1].sum(0)
+    return m

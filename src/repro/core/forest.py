@@ -1,0 +1,184 @@
+"""FederatedForest — the user-facing estimator (fit/predict).
+
+Orchestrates: master-side randomness (bootstrap weights + per-tree feature
+subsets, paper Alg. 2 lines 3–4), label encoding (crypto.py), the SPMD
+builder (tree.py) and the one-round predictor (prediction.py).
+
+The centralized baseline ("NonFF") is *the same code* with M = 1 — that is the
+strongest possible form of the paper's losslessness claim, and it's what the
+tests assert bit-identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import crypto, impurity, prediction, protocol, tree
+from repro.core.party import VerticalPartition, make_vertical_partition
+from repro.core.types import ForestParams
+
+
+@dataclasses.dataclass
+class FederatedForest:
+    params: ForestParams
+    encrypt_labels: bool = True
+    # Regression-target masking is opt-in: the affine mask preserves split
+    # gains exactly in real arithmetic but not in float32 (catastrophic
+    # cancellation near gain ties), so it trades exact losslessness for
+    # in-transit privacy — the same trade-off the paper concedes in §4.3
+    # ("there will be a trade-off between the security protection and the
+    # computational efficiency").
+    mask_regression: bool = False
+    hist_impl: str = "scatter"
+
+    # fitted state
+    trees_: tree.PartyTree | None = None      # leading axes (M, T, ...)
+    partition_: VerticalPartition | None = None
+    _decode: Callable | None = None
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, partition: VerticalPartition, y: np.ndarray) -> "FederatedForest":
+        p = self.params
+        if partition.xb.shape[2] == 0:
+            raise ValueError("empty feature space")
+        y = np.asarray(y)
+        if self.encrypt_labels and p.task == "classification":
+            y_enc, self._decode = crypto.encode_labels(y, p.n_classes, p.seed)
+        elif self.mask_regression and p.task == "regression":
+            y_enc, self._decode = crypto.mask_regression_targets(y, p.seed)
+        else:
+            y_enc, self._decode = y, lambda v: np.asarray(v)
+
+        y_stats = impurity.stat_channels(jnp.asarray(y_enc), p.task, p.n_classes)
+        weights, feat_sels = self._master_randomness(partition)
+
+        fit_fn = tree.fit_spmd(p, self.hist_impl)
+        run = protocol.jit_simulated(fit_fn, n_party=2, n_shared=3)
+        self.trees_ = jax.block_until_ready(run(
+            jnp.asarray(partition.xb), jnp.asarray(partition.feat_gid),
+            jnp.asarray(feat_sels), jnp.asarray(weights), y_stats))
+        self.partition_ = partition
+        return self
+
+    def _master_randomness(self, partition: VerticalPartition):
+        """Paper Alg. 2: master samples rows (bootstrap) + per-tree features."""
+        p = self.params
+        rng = np.random.default_rng(p.seed)
+        n, f = partition.n_samples, partition.n_features
+        t = p.n_estimators
+        if p.bootstrap:
+            idx = rng.integers(0, n, size=(t, n))
+            weights = np.stack([np.bincount(i, minlength=n) for i in idx])
+        else:
+            weights = np.ones((t, n))
+        k = max(1, int(np.ceil(p.max_features * f)))
+        feat_sels = np.zeros((t, f), dtype=bool)
+        for i in range(t):
+            feat_sels[i, rng.choice(f, size=k, replace=False)] = True
+        return weights.astype(np.float32), feat_sels
+
+    # -------------------------------------------------------------- predict
+    def _predict_common(self, x_test: np.ndarray, fn) -> np.ndarray:
+        assert self.trees_ is not None, "fit first"
+        xb_parts = self.partition_.bin_test(np.asarray(x_test))
+        pred_fn = functools.partial(fn, params=self.params)
+        run = protocol.jit_simulated(pred_fn, n_party=2, n_shared=0)
+        out = np.asarray(run(self.trees_, jnp.asarray(xb_parts))[0])
+        return self._decode(out) if self.params.task == "classification" else (
+            self._decode(out))
+
+    def predict(self, x_test: np.ndarray) -> np.ndarray:
+        """One-round prediction (the paper's algorithm)."""
+        return self._predict_common(x_test, prediction.forest_predict_oneround)
+
+    def predict_classical(self, x_test: np.ndarray) -> np.ndarray:
+        """Multi-round baseline (paper's comparison in Figs. 4–6)."""
+        return self._predict_common(x_test, prediction.forest_predict_classical)
+
+    # ------------------------------------------------- break-point recovery
+    def fit_resumable(self, partition: VerticalPartition, y: np.ndarray,
+                      ckpt_dir: str, trees_per_chunk: int = 2) -> "FederatedForest":
+        """Paper §4.1: "if the connection is down, the modeling can be easily
+        recovered from the break point."  Trees are independent (bagging), so
+        recovery granularity = tree chunks: each chunk's PartyTree stack is
+        checkpointed; a restarted fit resumes after the last complete chunk
+        and produces the IDENTICAL forest (master randomness is derived from
+        the seed, not from progress)."""
+        from repro import ckpt
+        p = self.params
+        y = np.asarray(y)
+        if self.encrypt_labels and p.task == "classification":
+            y_enc, self._decode = crypto.encode_labels(y, p.n_classes, p.seed)
+        else:
+            y_enc, self._decode = y, lambda v: np.asarray(v)
+        y_stats = impurity.stat_channels(jnp.asarray(y_enc), p.task, p.n_classes)
+        weights, feat_sels = self._master_randomness(partition)
+
+        fit_fn = tree.fit_spmd(p, self.hist_impl)
+        run = protocol.jit_simulated(fit_fn, n_party=2, n_shared=3)
+        chunks: list = []
+        done = ckpt.latest_step(ckpt_dir)
+        start = 0
+        if done is not None:
+            like = jax.eval_shape(
+                run, jax.ShapeDtypeStruct(partition.xb.shape, jnp.uint8),
+                jax.ShapeDtypeStruct(partition.feat_gid.shape, jnp.int32),
+                jax.ShapeDtypeStruct((done, partition.n_features), jnp.bool_),
+                jax.ShapeDtypeStruct((done, partition.n_samples), jnp.float32),
+                jax.ShapeDtypeStruct(y_stats.shape, y_stats.dtype))
+            chunks.append(ckpt.restore_checkpoint(ckpt_dir, done, like))
+            start = done
+        for lo in range(start, p.n_estimators, trees_per_chunk):
+            hi = min(lo + trees_per_chunk, p.n_estimators)
+            part_trees = run(jnp.asarray(partition.xb),
+                             jnp.asarray(partition.feat_gid),
+                             jnp.asarray(feat_sels[lo:hi]),
+                             jnp.asarray(weights[lo:hi]), y_stats)
+            chunks.append(part_trees)
+            merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+                                  *chunks)
+            ckpt.save_checkpoint(ckpt_dir, hi, merged)
+            chunks = [merged]
+        self.trees_ = chunks[0]
+        self.partition_ = partition
+        return self
+
+    # ------------------------------------------------------------ inspection
+    def feature_importance(self, view: str = "master") -> np.ndarray:
+        """Split-count importance over encoded feature ids (privacy-aware:
+        ``view='party:i'`` restricts to party i's own splits — what each
+        participant may legitimately compute locally)."""
+        assert self.trees_ is not None
+        trees = jax.tree.map(np.asarray, self.trees_)
+        counts = np.zeros(self.partition_.n_features, np.float64)
+        gids = trees.split_gid[0]             # master view (T, nn)
+        weights = trees.leaf_stats[0].sum(-1)  # node weighted counts (T, nn)
+        if view.startswith("party:"):
+            i = int(view.split(":")[1])
+            mine = trees.has_split[i]
+            gids = np.where(mine, gids, -1)
+        sel = gids >= 0
+        np.add.at(counts, gids[sel], weights[sel])
+        total = counts.sum()
+        return counts / total if total else counts
+
+    def master_tree_view(self):
+        """The complete model T as the master stores it (owner + encoded id)."""
+        assert self.trees_ is not None
+        t = jax.tree.map(lambda a: np.asarray(a[0]), self.trees_)
+        return {"owner": t.owner, "split_gid": t.split_gid,
+                "is_leaf": t.is_leaf, "leaf_stats": t.leaf_stats}
+
+
+def fit_federated_forest(x: np.ndarray, y: np.ndarray, n_parties: int,
+                         params: ForestParams, *, contiguous: bool = True,
+                         **forest_kw) -> FederatedForest:
+    """Convenience: vertical-partition a raw matrix and fit."""
+    part = make_vertical_partition(x, n_parties, params.n_bins,
+                                   contiguous=contiguous, seed=params.seed)
+    return FederatedForest(params, **forest_kw).fit(part, y)

@@ -1,0 +1,41 @@
+"""Runners that bind the SPMD federated protocol to an execution substrate.
+
+The builder/predictor in tree.py / prediction.py are written once against the
+``parties`` axis name.  They execute under:
+
+  * ``run_simulated``: vmap with axis_name — M parties on one host.  This is
+    the CPU test/benchmark path and is semantically identical to the
+    distributed run (collectives have the same meaning under vmap).
+  * ``run_sharded``: shard_map over a mesh axis literally named "parties" —
+    the production / dry-run path (mesh from launch/mesh.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.types import PARTY_AXIS
+
+
+def run_simulated(fn: Callable[..., Any], party_args: tuple, shared_args: tuple = ()):
+    """vmap over the leading party axis of ``party_args``; broadcast the rest."""
+    in_axes = (0,) * len(party_args) + (None,) * len(shared_args)
+    return jax.vmap(fn, in_axes=in_axes, axis_name=PARTY_AXIS)(
+        *party_args, *shared_args)
+
+
+def jit_simulated(fn: Callable[..., Any], n_party: int, n_shared: int,
+                  **jit_kw):
+    """jit(run_simulated(fn)) with the party/shared split baked in."""
+    @functools.partial(jax.jit, **jit_kw)
+    def wrapped(*args):
+        return run_simulated(fn, args[:n_party], args[n_party:n_party + n_shared])
+    return wrapped
+
+
+def replicate_to_mesh(x, mesh: Mesh):
+    """Device-put a host array replicated over every mesh axis."""
+    return jax.device_put(x, NamedSharding(mesh, P()))

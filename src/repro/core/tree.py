@@ -1,0 +1,205 @@
+"""Level-synchronous federated CART builder (the paper's Alg. 1/2/5/6).
+
+This is SPMD code: one logical "party" per index of the ``parties`` axis.  It
+runs unchanged under
+
+  * ``jax.vmap(..., axis_name=PARTY_AXIS)``           — single-host simulation
+  * ``shard_map`` over a mesh axis named ``parties``  — production (dry-run)
+
+TPU adaptation of the paper's recursive MPI algorithm (see DESIGN.md §2):
+
+  * breadth-first level building: all ``2^d`` nodes of a depth split together;
+    the master's per-node gather/argmax/notify/broadcast round-trips collapse
+    into THREE collectives per level (all_gather of masked local bests, and
+    one psum carrying the owner-computed partition bits);
+  * the master is dissolved into those collectives — every party evaluates the
+    argmax of the gathered (gain, feature-id) pairs identically, which is the
+    same function the trusted server computes in the paper;
+  * trees live in fixed-shape heap arrays (node i -> children 2i+1, 2i+2).
+
+Distributed model storage is preserved exactly: a party records (feature,
+threshold) only for nodes it owns (``has_split``); the shared structure
+(``is_leaf`` + heap layout) is what the paper calls "keeping the node
+structure"; ``owner``/``split_gid`` are the master-side view.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import impurity
+from repro.core.types import PARTY_AXIS, ForestParams
+from repro.kernels import ops
+
+_BIG = jnp.int32(2**30)
+
+
+class PartyTree(NamedTuple):
+    """One party's view of one tree (all arrays sized n_nodes = 2^(k+1)-1)."""
+
+    is_leaf: jnp.ndarray      # (nn,)  bool   — shared structure
+    leaf_stats: jnp.ndarray   # (nn,C) f32    — shared (labels are shared, §4.3)
+    has_split: jnp.ndarray    # (nn,)  bool   — "this node's split is mine"
+    split_floc: jnp.ndarray   # (nn,)  int32  — LOCAL feature index (mine only)
+    split_bin: jnp.ndarray    # (nn,)  int32  — split bin   (mine only)
+    owner: jnp.ndarray        # (nn,)  int32  — master view: owning party
+    split_gid: jnp.ndarray    # (nn,)  int32  — master view: encoded feature id
+
+
+def _local_argbest(gains: jnp.ndarray, feat_gid: jnp.ndarray):
+    """Per-node best split with the deterministic lexicographic tie-break
+    (max gain, then min global feature id, then min bin).
+
+    The two-stage max — local per party, then global across parties — yields
+    exactly the same winner as a centralized single pass because max and the
+    lexicographic tie-break are associative.  This is what makes FF(M) ==
+    FF(1) *bit-identical*, not just statistically close.
+    """
+    _, fp, bm1 = gains.shape
+    g = gains.max((1, 2))
+    elig = (gains == g[:, None, None]) & jnp.isfinite(gains)
+    gid_m = jnp.broadcast_to(feat_gid[None, :, None].astype(jnp.int32), gains.shape)
+    gid = jnp.where(elig, gid_m, _BIG).min((1, 2))
+    sel = elig & (gid_m == gid[:, None, None])
+    bin_m = jnp.broadcast_to(jnp.arange(bm1, dtype=jnp.int32)[None, None, :], gains.shape)
+    bin_ = jnp.where(sel, bin_m, _BIG).min((1, 2))
+    floc_m = jnp.broadcast_to(jnp.arange(fp, dtype=jnp.int32)[None, :, None], gains.shape)
+    floc = jnp.where(sel, floc_m, _BIG).min((1, 2))
+    return g, gid, bin_, floc
+
+
+def build_tree(xb: jnp.ndarray, feat_gid: jnp.ndarray, feat_sel: jnp.ndarray,
+               weight: jnp.ndarray, y_stats: jnp.ndarray,
+               params: ForestParams, *, hist_impl: str = "scatter") -> PartyTree:
+    """Build one tree, SPMD over PARTY_AXIS.
+
+    Args:
+      xb:       (N, Fp) uint8 party-local binned features (padded).
+      feat_gid: (Fp,) int32 global feature ids, -1 for padding.
+      feat_sel: (F,) bool master's per-tree feature subsample (global ids).
+      weight:   (N,) float32 bootstrap weights (0 excludes a sample).
+      y_stats:  (N, C) label stat channels — shared across parties (the paper
+                copies encrypted labels to every client, §3.1).
+    """
+    n, fp_dim = xb.shape
+    c = y_stats.shape[-1]
+    nn = params.n_nodes
+    me = lax.axis_index(PARTY_AXIS)
+    task = params.task
+
+    fmask = (feat_gid >= 0) & feat_sel[jnp.clip(feat_gid, 0)]
+    wstats = y_stats.astype(jnp.float32) * weight[:, None]
+
+    node = jnp.zeros((n,), jnp.int32)
+    is_leaf = jnp.zeros((nn,), bool)
+    leaf_stats = jnp.zeros((nn, c), jnp.float32)
+    has_split = jnp.zeros((nn,), bool)
+    split_floc = jnp.full((nn,), -1, jnp.int32)
+    split_bin = jnp.full((nn,), -1, jnp.int32)
+    owner = jnp.full((nn,), -1, jnp.int32)
+    split_gid = jnp.full((nn,), -1, jnp.int32)
+    prev_hist = None  # parent-level histograms (hist_subtraction)
+
+    for d in range(params.max_depth + 1):
+        off, width = params.level_slice(d)
+        nil = node - off
+        in_lvl = (nil >= 0) & (nil < width)
+        seg = jnp.where(in_lvl, nil, -1)
+
+        # Node label stats — computed identically by every party (shared y).
+        dump = jnp.where(seg >= 0, seg, width)
+        nstats = jnp.zeros((width + 1, c), jnp.float32).at[dump].add(wstats)[:width]
+        cnt = impurity.count_of(nstats, task)
+        leaf_stats = lax.dynamic_update_slice(leaf_stats, nstats, (off, 0))
+
+        if d == params.max_depth:  # bottom level: everything alive is a leaf
+            is_leaf = lax.dynamic_update_slice(is_leaf, cnt > 0, (off,))
+            break
+
+        # ---- local split search (the Pallas histogram hot spot) ------------
+        if params.hist_subtraction and prev_hist is not None:
+            # Beyond-paper: histogram only the LEFT children (half the node
+            # one-hot width), derive the right siblings by subtraction from
+            # the retained parent histograms. Children of leaf parents get
+            # garbage rows, but do_split is gated on cnt (true sample
+            # counts), so they can never be selected.
+            left_seg = jnp.where((seg >= 0) & (seg % 2 == 0), seg // 2, -1)
+            hist_left = ops.histogram(xb.astype(jnp.int32), left_seg, wstats,
+                                      width // 2, params.n_bins,
+                                      impl=hist_impl)
+            hist = jnp.stack([hist_left, prev_hist - hist_left],
+                             axis=1).reshape(width, fp_dim, params.n_bins, c)
+        else:
+            hist = ops.histogram(xb.astype(jnp.int32), seg, wstats, width,
+                                 params.n_bins, impl=hist_impl)
+        prev_hist = hist
+        gains = impurity.split_gains(hist, task, params.min_samples_leaf)
+        gains = jnp.where(fmask[None, :, None], gains, -jnp.inf)
+        g_loc, gid_loc, bin_loc, floc_loc = _local_argbest(gains, feat_gid)
+
+        # ---- the paper's master: gather -> argmax -> notify, as collectives
+        g_all = lax.all_gather(g_loc, PARTY_AXIS)          # (M, width)
+        gid_all = lax.all_gather(gid_loc, PARTY_AXIS)
+        bin_all = lax.all_gather(bin_loc, PARTY_AXIS)
+        g_best = g_all.max(0)
+        elig = (g_all == g_best[None]) & jnp.isfinite(g_all)
+        gid_best = jnp.where(elig, gid_all, _BIG).min(0)
+        sel = elig & (gid_all == gid_best[None])
+        m = g_all.shape[0]
+        owner_lv = jnp.where(sel, jnp.arange(m, dtype=jnp.int32)[:, None], _BIG).min(0)
+        bin_best = jnp.where(sel, bin_all, _BIG).min(0)
+
+        thr = max(params.min_impurity_decrease, 1e-9)
+        do_split = (jnp.isfinite(g_best) & (g_best > thr)
+                    & (cnt >= params.min_samples_split))
+        is_leaf = lax.dynamic_update_slice(is_leaf, (cnt > 0) & ~do_split, (off,))
+
+        mine = do_split & (owner_lv == me)  # "receive the split message" (Alg.1)
+        has_split = lax.dynamic_update_slice(has_split, mine, (off,))
+        split_floc = lax.dynamic_update_slice(
+            split_floc, jnp.where(mine, floc_loc, -1), (off,))
+        split_bin = lax.dynamic_update_slice(
+            split_bin, jnp.where(mine, bin_loc, -1), (off,))
+        owner = lax.dynamic_update_slice(
+            owner, jnp.where(do_split, owner_lv.astype(jnp.int32), -1), (off,))
+        split_gid = lax.dynamic_update_slice(
+            split_gid, jnp.where(do_split, gid_best, -1), (off,))
+
+        # ---- owner computes the partition; one psum broadcasts it ----------
+        # (paper Alg.2: "Receive split indices from client j and broadcast")
+        nil_c = jnp.clip(nil, 0, width - 1)
+        floc_lv = jnp.where(mine, floc_loc, 0)
+        bin_lv = jnp.where(mine, bin_loc, 0)
+        mine_s = in_lvl & mine[nil_c]
+        vals = jnp.take_along_axis(
+            xb.astype(jnp.int32), floc_lv[nil_c][:, None], axis=1)[:, 0]
+        go_r_loc = jnp.where(mine_s, (vals > bin_lv[nil_c]).astype(jnp.int32), 0)
+        go_r = lax.psum(go_r_loc, PARTY_AXIS)  # exactly one party contributes
+        advance = in_lvl & do_split[nil_c]
+        node = jnp.where(advance, 2 * node + 1 + go_r, node)
+
+    return PartyTree(is_leaf, leaf_stats, has_split, split_floc, split_bin,
+                     owner, split_gid)
+
+
+def build_forest(xb, feat_gid, feat_sels, weights, y_stats,
+                 params: ForestParams, *, hist_impl: str = "scatter") -> PartyTree:
+    """SPMD bagging loop: stack T trees (leading axis T on every leaf).
+
+    ``lax.map`` keeps HLO size O(1) in the number of trees and bounds peak
+    histogram memory to one tree's level at a time.
+    """
+    def one(args):
+        sel, w = args
+        return build_tree(xb, feat_gid, sel, w, y_stats, params,
+                          hist_impl=hist_impl)
+    return lax.map(one, (feat_sels, weights))
+
+
+def fit_spmd(params: ForestParams, hist_impl: str = "scatter"):
+    """Returns the party-local SPMD fit function (for vmap or shard_map)."""
+    return functools.partial(build_forest, params=params, hist_impl=hist_impl)

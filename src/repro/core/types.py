@@ -1,0 +1,67 @@
+"""Core typed configuration for the Federated Forest.
+
+All static hyper-parameters live here so that jitted builders can close over a
+hashable, frozen params object (used as a static argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Task = Literal["classification", "regression"]
+
+PARTY_AXIS = "parties"  # mesh/vmap axis name over which the federated protocol runs
+
+
+@dataclasses.dataclass(frozen=True)
+class ForestParams:
+    """Hyper-parameters of a (federated) random forest.
+
+    Mirrors the knobs of the paper's CART + bagging setup (Alg. 1/2/5/6).
+    """
+
+    task: Task = "classification"
+    n_classes: int = 2              # ignored for regression
+    n_estimators: int = 10
+    max_depth: int = 6
+    min_samples_split: int = 2
+    min_samples_leaf: int = 1
+    min_impurity_decrease: float = 0.0
+    n_bins: int = 32                # quantile bins (<= 256, stored as uint8)
+    max_features: float = 1.0       # per-tree feature subsampling fraction (master-side)
+    bootstrap: bool = True
+    seed: int = 0
+    # Beyond-paper (§Perf): sibling histogram = parent - left-child
+    # (LightGBM's subtraction trick) — halves split-finding compute below the
+    # root. Exact for classification (integer counts in f32); for regression
+    # it reorders float sums, so it is a statistically-equivalent variant.
+    hist_subtraction: bool = False
+
+    def __post_init__(self) -> None:
+        if not (1 <= self.n_bins <= 256):
+            raise ValueError("n_bins must be in [1, 256]")
+        if self.max_depth < 1:
+            raise ValueError("max_depth must be >= 1")
+        if self.task not in ("classification", "regression"):
+            raise ValueError(f"unknown task {self.task!r}")
+        if not (0.0 < self.max_features <= 1.0):
+            raise ValueError("max_features must be in (0, 1]")
+
+    # ---- derived static sizes -------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        """Total nodes of the complete binary tree (heap layout)."""
+        return 2 ** (self.max_depth + 1) - 1
+
+    @property
+    def n_stat_channels(self) -> int:
+        """Label-statistic channels accumulated in histograms.
+
+        classification: per-class (weighted) counts.
+        regression:     (w, w*y, w*y^2) — enough for variance/SSE splits.
+        """
+        return self.n_classes if self.task == "classification" else 3
+
+    def level_slice(self, depth: int) -> tuple[int, int]:
+        """(offset, width) of the nodes at ``depth`` in heap layout."""
+        return 2**depth - 1, 2**depth

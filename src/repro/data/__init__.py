@@ -1,0 +1,1 @@
+from repro.data.tabular import DATASETS, make_classification, make_regression, load_dataset  # noqa: F401

@@ -1,0 +1,44 @@
+"""Synthetic language-modeling data pipeline.
+
+Markov-chain token streams with learnable structure (so cross-entropy has
+signal to descend) + the modality stubs (frames/patches) the audio/VLM
+architectures consume.  Deterministic per seed; an infinite generator, the
+shape a real pipeline (pygrain etc.) would have.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def _markov_tokens(rng: np.random.Generator, vocab: int, shape,
+                   order_states: int = 64) -> np.ndarray:
+    """Tokens from a sparse random Markov chain over `order_states` states."""
+    trans = rng.integers(0, vocab, size=(order_states, 8))
+    state = rng.integers(0, order_states, size=shape[0])
+    out = np.empty(shape, np.int32)
+    for t in range(shape[1]):
+        choice = rng.integers(0, 8, size=shape[0])
+        out[:, t] = trans[state, choice]
+        state = (out[:, t] + choice) % order_states
+    return out
+
+
+def synthetic_lm_batches(cfg: ArchConfig, batch: int, seq: int, *,
+                         seed: int = 0) -> Iterator[dict]:
+    rng = np.random.default_rng(seed)
+    while True:
+        b = {"tokens": jnp.asarray(_markov_tokens(rng, cfg.vocab, (batch, seq)))}
+        if cfg.enc_layers:
+            b["frames"] = jnp.asarray(
+                rng.normal(size=(batch, cfg.enc_frames, cfg.d_model)) * 0.1,
+                jnp.dtype(cfg.dtype))
+        if cfg.n_patches:
+            b["patches"] = jnp.asarray(
+                rng.normal(size=(batch, cfg.n_patches, cfg.d_model)) * 0.1,
+                jnp.dtype(cfg.dtype))
+        yield b

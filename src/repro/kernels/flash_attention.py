@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: flash attention (online softmax) for prefill.
+
+Classic blocked formulation adapted to TPU VMEM/MXU:
+
+  * grid (batch*heads, q_blocks, k_blocks); the k axis is the sequential
+    minor grid dimension, accumulating into VMEM scratch (acc, m, l);
+  * (block_q x d) @ (d x block_k) runs on the MXU; the online-softmax
+    rescale is VPU work on (block_q,) vectors;
+  * causal and sliding-window masks are applied via position iota, so the
+    same kernel serves full-causal prefill and the SWA long-context variant
+    (DESIGN.md §5) — window=None means unbounded lookback.
+
+Defaults (block 128 x 128, d<=128) keep the working set << VMEM:
+q/k/v/acc blocks ~ 4 * 128*128*4B = 256 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *, scale: float,
+                 causal: bool, window: int | None, sq: int, sk: int,
+                 bq: int, bk: int, nk: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, _NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0].astype(jnp.float32)                      # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                      # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = (pl.program_id(1) * bq
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (sk - sq))
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < sk                                       # k padding
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev, l_prev = m_s[...], l_s[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)                            # kill _NEG rows
+    alpha = jnp.exp(m_prev - m_new)
+    l_s[...] = alpha * l_prev + p.sum(-1)
+    m_s[...] = m_new
+    acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k, v: (B, H, Sk, D) (GQA repeat done by the caller).
+
+    The last q position is aligned with the last k position (decode-friendly).
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    bq, bk = min(block_q, sq), min(block_k, sk)
+
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    q_pad, k_pad = -sq % bq, -sk % bk
+    qf = jnp.pad(qf, ((0, 0), (0, q_pad), (0, 0)))
+    kf = jnp.pad(kf, ((0, 0), (0, k_pad), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, k_pad), (0, 0)))
+    nq, nk = qf.shape[1] // bq, kf.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal,
+                          window=window, sq=sq, sk=sk, bq=bq, bk=bk, nk=nk),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, qf.shape[1], d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, :sq].reshape(b, h, sq, d)

@@ -1,0 +1,45 @@
+"""Jit'd public wrappers for the kernels, with backend dispatch.
+
+``histogram`` has three interchangeable implementations:
+  * ``pallas``  — the TPU kernel (interpret=True executes it on CPU);
+  * ``scatter`` — index-add formulation, fastest on CPU hosts (used by the
+                  single-host simulation path of the federated protocol);
+  * ``ref``     — the einsum oracle.
+All agree to float32 tolerance (tests/test_kernels.py sweeps them).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import histogram as _hist_kernel
+from repro.kernels import ref as _ref
+
+
+def _histogram_scatter(xb, seg, stats, n_level: int, n_bins: int):
+    n, f = xb.shape
+    c = stats.shape[-1]
+    xb = xb.astype(jnp.int32)
+    # flat bucket id per (sample, feature); invalid samples -> overflow slot
+    base = seg[:, None] * (f * n_bins) + jnp.arange(f)[None, :] * n_bins + xb
+    flat = jnp.where(seg[:, None] >= 0, base, n_level * f * n_bins)
+    vals = jnp.broadcast_to(stats[:, None, :], (n, f, c)).astype(jnp.float32)
+    out = jnp.zeros((n_level * f * n_bins + 1, c), jnp.float32)
+    out = out.at[flat.reshape(-1)].add(vals.reshape(-1, c))
+    return out[:-1].reshape(n_level, f, n_bins, c)
+
+
+@functools.partial(jax.jit, static_argnames=("n_level", "n_bins", "impl"))
+def histogram(xb: jnp.ndarray, seg: jnp.ndarray, stats: jnp.ndarray,
+              n_level: int, n_bins: int, impl: str = "scatter") -> jnp.ndarray:
+    """Split-statistics histogram: (n_level, F, n_bins, C) float32."""
+    if impl == "scatter":
+        return _histogram_scatter(xb, seg, stats, n_level, n_bins)
+    if impl == "pallas":
+        return _hist_kernel.histogram_pallas(xb, seg, stats, n_level, n_bins,
+                                             interpret=True)
+    if impl == "ref":
+        return _ref.histogram_ref(xb, seg, stats, n_level, n_bins)
+    raise ValueError(f"unknown impl {impl!r}")

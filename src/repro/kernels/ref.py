@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth: every kernel must match its oracle to
+float tolerance across the shape/dtype sweep in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def histogram_ref(xb: jnp.ndarray, seg: jnp.ndarray, stats: jnp.ndarray,
+                  n_level: int, n_bins: int) -> jnp.ndarray:
+    """Split-statistics histogram — the Federated Forest compute hot spot.
+
+    hist[l, f, b, c] = sum_s 1[seg[s] == l] * 1[xb[s, f] == b] * stats[s, c]
+
+    Args:
+      xb:    (N, F) integer bin ids.
+      seg:   (N,) node slot within the current tree level; -1 drops the sample.
+      stats: (N, C) per-sample (already weight-multiplied) label statistics.
+    Returns:
+      (n_level, F, n_bins, C) float32.
+    """
+    node1h = (seg[:, None] == jnp.arange(n_level)[None, :]).astype(jnp.float32)
+    bin1h = (xb[:, :, None] == jnp.arange(n_bins)[None, None, :]).astype(jnp.float32)
+    return jnp.einsum("sl,sfb,sc->lfbc", node1h, bin1h,
+                      stats.astype(jnp.float32), optimize=True)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int | None = None,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Reference attention. q,k,v: (B, H, S, D) — GQA head-repeat done by caller."""
+    f32 = jnp.float32
+    sq, sk = q.shape[2], k.shape[2]
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(f32), k.astype(f32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # align last q with last k
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.nan_to_num(jnp.exp(logits - logits.max(-1, keepdims=True)))
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(f32)).astype(q.dtype)

@@ -1,0 +1,127 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import: jax locks the device count on first init.
+# This module is only imported by the dry-run entry point — tests/benches see
+# the single real CPU device (never import this from library code).
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro import roofline as rl                 # noqa: E402
+from repro.configs import registry               # noqa: E402
+from repro.launch import cases, mesh as mesh_mod  # noqa: E402
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture × input shape) the production step function is
+``.lower().compile()``d against the single-pod (16×16) and multi-pod
+(2×16×16 = 512 chips) meshes.  ``memory_analysis()`` proves the program fits
+HBM; ``cost_analysis()`` + HLO collective parsing feed §Roofline.
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and are
+aggregated into EXPERIMENTS.md by benchmarks/roofline_report.py.
+"""
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path = OUT_DIR, force: bool = False) -> dict:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_tag}
+    t0 = time.time()
+    try:
+        if arch == "federated-forest":
+            mesh = mesh_mod.make_forest_mesh(multi_pod=multi_pod)
+            fn, args, _ = cases.forest_case(shape_name, mesh)
+            lowered = jax.jit(fn).lower(*args)
+            cfg = None
+        else:
+            mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+            case = cases.input_specs(arch, shape_name, mesh)
+            cfg = case.cfg
+            lowered = case.lower(mesh)
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")}
+        r = rl.analyze(compiled)
+        n_chips = 512 if multi_pod else 256
+        mf = 0.0
+        if cfg is not None:
+            sh = cases.SHAPES[shape_name]
+            mf = rl.model_flops(cfg, sh.kind, sh.batch, sh.seq)
+        record["roofline"] = r.summary(model_flops_global=mf, n_chips=n_chips)
+        record["collectives"] = r.coll_detail
+        record["status"] = "ok"
+    except cases.Skip as e:
+        record["status"] = "skip"
+        record["reason"] = str(e)
+    except Exception as e:  # a failure here is a sharding bug — record it
+        record["status"] = "fail"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-3000:]
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=2, default=float))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'federated-forest', or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = (list(registry.ARCH_IDS) + ["federated-forest"]
+             if args.arch == "all" else [args.arch])
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        shape_names = (list(cases.FOREST_SHAPES) if arch == "federated-forest"
+                       else list(cases.SHAPES))
+        if args.shape != "all":
+            shape_names = [args.shape]
+        for shape in shape_names:
+            for mp in meshes:
+                rec = run_case(arch, shape, mp, force=args.force)
+                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                if rec["status"] == "ok":
+                    ro = rec["roofline"]
+                    print(f"OK   {tag}: mem/dev={ro['mem_per_dev_gib']:.2f}GiB "
+                          f"bottleneck={ro['bottleneck']} "
+                          f"t=({ro['t_compute_s']:.3e},{ro['t_memory_s']:.3e},"
+                          f"{ro['t_collective_s']:.3e})s "
+                          f"[lower {rec.get('lower_s')}s compile {rec.get('compile_s')}s]")
+                elif rec["status"] == "skip":
+                    print(f"SKIP {tag}: {rec['reason']}")
+                else:
+                    n_fail += 1
+                    print(f"FAIL {tag}: {rec['error']}")
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run case(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ must precede jax init, same contract as dryrun.py
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import roofline as rl                  # noqa: E402
+from repro.launch import cases, mesh as mesh_mod  # noqa: E402
+
+"""§Perf hillclimb driver: lower named variants of a case and report the
+delta on the three roofline terms vs the recorded baseline.
+
+Variants are explicit named experiments (hypothesis encoded in code), so the
+EXPERIMENTS.md log can cite exactly what changed:
+
+  qwen3-32b × train_4k        mb32 | probs_bf16 | remat_dots | combos
+  qwen2-moe-a2.7b × prefill   moe_shard | moe_shard+probs_bf16
+  federated-forest × ff_predict  mask_u8
+"""
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "perf"
+
+# variant name -> (cfg overrides, extra kwargs)
+NN_VARIANTS: dict[str, dict] = {
+    "baseline":      dict(),
+    "mb2":           dict(micro_batch=2),
+    "mb4":           dict(micro_batch=4),
+    "mb16":          dict(micro_batch=16),
+    "mb32":          dict(micro_batch=32),
+    "probs_bf16":    dict(overrides={"attn_probs_bf16": True}),
+    "remat_dots":    dict(overrides={"remat": "dots"}),
+    "remat_none":    dict(overrides={"remat": "none"}),
+    "moe_shard":     dict(overrides={"moe_shard_acts": True}),
+    "mb32+probs":    dict(micro_batch=32, overrides={"attn_probs_bf16": True}),
+    "mb32+probs+dots": dict(micro_batch=32,
+                            overrides={"attn_probs_bf16": True,
+                                       "remat": "dots"}),
+    "moe_shard+probs": dict(overrides={"moe_shard_acts": True,
+                                       "attn_probs_bf16": True}),
+    "scores_bf16":     dict(overrides={"attn_scores_bf16": True}),
+    "remat_attn_out":  dict(overrides={"remat": "attn_out"}),
+    "scores+attn_out": dict(overrides={"attn_scores_bf16": True,
+                                       "remat": "attn_out"}),
+    "moe_shard+scores": dict(overrides={"moe_shard_acts": True,
+                                        "attn_scores_bf16": True}),
+    "fsdp_layout":     dict(serve_layout=False),   # serving baseline layout
+    "serve_layout":    dict(serve_layout=True),    # tensor-parallel weights
+    "expert_data":     dict(expert_data=True),     # experts over data axis
+    "pad_experts":     dict(overrides={"pad_experts": True}),  # E->64, model-EP
+    "pad_experts+data": dict(overrides={"pad_experts": True}, expert_data=True),
+}
+
+
+def run_nn_variant(arch: str, shape: str, variant: str, force=False) -> dict:
+    out = OUT_DIR / f"{arch}__{shape}__{variant}.json"
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    kw = NN_VARIANTS[variant]
+    mesh = mesh_mod.make_production_mesh()
+    t0 = time.time()
+    case = cases.input_specs(arch, shape, mesh,
+                             overrides=kw.get("overrides"),
+                             micro_batch=kw.get("micro_batch"),
+                             serve_layout=kw.get("serve_layout"),
+                             expert_data=kw.get("expert_data", False))
+    compiled = case.lower(mesh).compile()
+    r = rl.analyze(compiled)
+    sh = cases.SHAPES[shape]
+    mf = rl.model_flops(case.cfg, sh.kind, sh.batch, sh.seq)
+    rec = {"arch": arch, "shape": shape, "variant": variant,
+           "wall_s": round(time.time() - t0, 1),
+           "roofline": r.summary(model_flops_global=mf, n_chips=256),
+           "collectives": r.coll_detail}
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=2, default=float))
+    return rec
+
+
+def run_ff_train_variant(variant: str, force=False) -> dict:
+    """ff_train variants: einsum (MXU-fidelity) histogram baseline vs the
+    beyond-paper histogram-subtraction trick."""
+    from repro.core.types import ForestParams
+    out = OUT_DIR / f"federated-forest__ff_train__{variant}.json"
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    fs = cases.FOREST_SHAPES["ff_train"]
+    p = ForestParams(task="classification", n_classes=2,
+                     n_estimators=fs.n_trees_per_shard, max_depth=8,
+                     n_bins=32,
+                     hist_subtraction=variant.endswith("hist_sub"))
+    mesh = mesh_mod.make_forest_mesh()
+    fn, args, _ = cases.forest_case("ff_train", mesh, params=p,
+                                    hist_impl="ref")
+    t0 = time.time()
+    compiled = jax.jit(fn).lower(*args).compile()
+    r = rl.analyze(compiled)
+    rec = {"arch": "federated-forest", "shape": "ff_train",
+           "variant": variant, "wall_s": round(time.time() - t0, 1),
+           "roofline": r.summary(), "collectives": r.coll_detail}
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=2, default=float))
+    return rec
+
+
+def run_ff_variant(variant: str, force=False) -> dict:
+    """federated-forest × ff_predict: int32 vs uint8 membership psum."""
+    from repro.core import prediction, tree
+    out = OUT_DIR / f"federated-forest__ff_predict__{variant}.json"
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    mask_dtype = {"baseline": jnp.int32, "mask_u8": jnp.uint8,
+                  "mask_u8+argmax": jnp.uint8}[variant]
+    vote_impl = "argmax" if variant.endswith("argmax") else "einsum"
+    mesh = mesh_mod.make_forest_mesh()
+    # rebuild the predict case with the dtype knob
+    fn, args, p = cases.forest_case("ff_predict", mesh)
+    if variant != "baseline":
+        fs = cases.FOREST_SHAPES["ff_predict"]
+        m = mesh.shape["parties"]
+        from jax.sharding import PartitionSpec as P
+        trees_shape, xb_test = args
+
+        def predict_local(tr, xbt):
+            tr = jax.tree.map(lambda a: a[0], tr)
+            per_tree = prediction.forest_predict_oneround(
+                tr, xbt[0], p, aggregate=False, mask_dtype=mask_dtype,
+                vote_impl=vote_impl)
+            return per_tree[None]
+
+        tree_specs = jax.tree.map(lambda _: P("parties", "trees"), trees_shape,
+                                  is_leaf=lambda x: hasattr(x, "shape"))
+        inner = jax.shard_map(predict_local, mesh=mesh,
+                              in_specs=(tree_specs, P("parties")),
+                              out_specs=P("parties", "trees"), check_vma=False)
+
+        def fn(trees, xbt):  # noqa: F811 — same vote wrapper as forest_case
+            per_tree = inner(trees, xbt)
+            votes = (per_tree[0][..., None]
+                     == jnp.arange(p.n_classes)[None, None]).sum(0)
+            return jnp.argmax(votes, -1)
+
+    t0 = time.time()
+    compiled = jax.jit(fn).lower(*args).compile()
+    r = rl.analyze(compiled)
+    rec = {"arch": "federated-forest", "shape": "ff_predict",
+           "variant": variant, "wall_s": round(time.time() - t0, 1),
+           "roofline": r.summary(), "collectives": r.coll_detail}
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=2, default=float))
+    return rec
+
+
+def _report(rec: dict) -> None:
+    ro = rec["roofline"]
+    print(f"{rec['arch']} × {rec['shape']} × {rec['variant']}: "
+          f"t=({ro['t_compute_s']:.3e}, {ro['t_memory_s']:.3e}, "
+          f"{ro['t_collective_s']:.3e})s bound={ro['bottleneck']} "
+          f"mem={ro['mem_per_dev_gib']:.2f}GiB")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--case", required=True,
+                    help="arch:shape (or federated-forest:ff_predict)")
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    arch, shape = args.case.split(":")
+    if arch == "federated-forest" and shape == "ff_train":
+        rec = run_ff_train_variant(args.variant, force=args.force)
+    elif arch == "federated-forest":
+        rec = run_ff_variant(args.variant, force=args.force)
+    else:
+        rec = run_nn_variant(arch, shape, args.variant, force=args.force)
+    _report(rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,384 @@
+"""Dense building blocks: RMSNorm, RoPE/M-RoPE, GQA attention (causal /
+sliding-window / bidirectional / cross), SwiGLU MLP, capacity-based MoE.
+
+Conventions:
+  * params are nested dicts of jnp arrays; inits take (key, cfg);
+  * activations (B, S, D); attention is query-chunked (exact, lax.map over
+    q blocks) so S×S score tensors are never fully materialized — the pure
+    JAX analogue of the Pallas flash kernel, and what the dry-run lowers;
+  * KV caches are ring buffers {k, v, kpos}: ``kpos`` records the absolute
+    position held in each slot, which uniformly handles full-cache decode
+    (capacity = seq_len) and sliding-window decode (capacity = window).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = dict[str, Any]
+ATTN_Q_CHUNK = 1024
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _dense_init(key, shape, scale_axis=0):
+    scale = 1.0 / math.sqrt(shape[scale_axis])
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ----------------------------------------------------------------- RMSNorm
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (n * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(dh: int, theta: float) -> jnp.ndarray:
+    return theta ** (-jnp.arange(0, dh // 2, dtype=jnp.float32) / (dh // 2))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               sections: Optional[tuple[int, int, int]] = None) -> jnp.ndarray:
+    """x: (B, S, H, dh). positions: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the dh/2 rotary frequencies are split into (t, h, w)
+    sections, each rotated by its own position stream.
+    """
+    b, s, h, dh = x.shape
+    freqs = rope_freqs(dh, theta)                        # (dh/2,)
+    if sections is None:
+        ang = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,dh/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        parts = []
+        start = 0
+        for i, sec in enumerate(sections):
+            p = positions[i].astype(jnp.float32)[..., None]
+            parts.append(p * freqs[start:start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, -1)                 # (B,S,dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None], jnp.sin(ang)[:, :, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(..., ) int positions -> (..., d) sinusoidal embedding (whisper)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * math.log(10000.0) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+# --------------------------------------------------------------- attention
+@dataclasses.dataclass
+class AttnMode:
+    kind: str                      # "causal" | "bidir" | "cross"
+    window: Optional[int] = None
+
+
+def init_attention(key, cfg: ArchConfig) -> Params:
+    d, dh, h, kh = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * dh)),
+        "wk": _dense_init(ks[1], (d, kh * dh)),
+        "wv": _dense_init(ks[2], (d, kh * dh)),
+        "wo": _dense_init(ks[3], (h * dh, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return jax.tree.map(lambda a: a.astype(_dtype(cfg)), p)
+
+
+def _sdpa_chunked(q, k, v, mode: AttnMode, q_offset, kpos,
+                  probs_bf16: bool = False, scores_bf16: bool = False,
+                  pretranspose: bool = True):
+    """q: (B,Sq,H,dh); k,v: (B,Sk,Kh,dh); kpos: (Sk,) absolute key positions
+    (-1 = empty slot). Query-chunked exact attention; GQA via head grouping.
+
+    §Perf: the S×S scores chain (scores matmul -> mask+softmax fusion ->
+    probs matmul) dominates HBM traffic for long-sequence training; the
+    bf16 knobs halve what is *materialized* between the two matmuls while
+    the softmax itself stays in f32 registers (the Pallas flash kernel is
+    the TPU deployment path that removes the chain entirely)."""
+    b, sq, h, dh = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = dh ** -0.5
+    qg = q.reshape(b, sq, kh, g, dh)
+    score_dt = jnp.bfloat16 if scores_bf16 else jnp.float32
+
+    # k/v pre-transposed ONCE outside the chunk loop (k-sized, cheap) so the
+    # scores einsums are layout-native — without this XLA inserts transposes
+    # of the S×S scores tensor, ~15% of all HBM traffic (§Perf profile).
+    # Training-only: at prefill/decode the transposed full-sequence copies
+    # raise peak residency (§Perf found +22 GiB/dev on qwen3 prefill_32k),
+    # and there the chain is traversed once so the transpose win is smaller.
+    if pretranspose:
+        kt = k.transpose(0, 2, 1, 3)                      # (B,Kh,Sk,dh)
+        vt = v.transpose(0, 2, 1, 3)
+    else:
+        kt, vt = k, v
+
+    def chunk(qc_and_pos):
+        qc, qpos = qc_and_pos                             # (B,cq,Kh,G,dh), (cq,)
+        if pretranspose:
+            qt = qc.transpose(0, 2, 3, 1, 4)              # (B,Kh,G,cq,dh) small
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qt.astype(score_dt),
+                           kt.astype(score_dt),
+                           preferred_element_type=score_dt)
+        else:  # v1 formulation: lowest peak residency (prefill/decode)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qc.astype(score_dt),
+                           kt.astype(score_dt),
+                           preferred_element_type=score_dt)
+        s = s * jnp.asarray(scale, score_dt)
+        valid = kpos[None, :] >= 0
+        if mode.kind in ("causal",):
+            valid &= kpos[None, :] <= qpos[:, None]
+        if mode.window is not None:
+            valid &= kpos[None, :] > qpos[:, None] - mode.window
+        s = jnp.where(valid[None, None, None], s, jnp.asarray(-1e30, score_dt))
+        if scores_bf16:
+            # manual softmax with bf16 STORAGE: the max/sum reductions and
+            # the exp run in f32 transiently inside fusions, but every
+            # materialized S×S tensor is bf16 (halves the chain's traffic)
+            m = s.max(-1, keepdims=True).astype(jnp.float32)
+            p = jnp.exp(s.astype(jnp.float32) - m).astype(jnp.bfloat16)
+            denom = p.astype(jnp.float32).sum(-1, keepdims=True)
+            p = (p.astype(jnp.float32) / jnp.maximum(denom, 1e-30)
+                 ).astype(jnp.bfloat16)
+        else:
+            p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+            if probs_bf16:  # §Perf: halve the HBM-resident probs
+                p = p.astype(jnp.bfloat16)
+        if pretranspose:
+            out = jnp.einsum("bkgqs,bksd->bkgqd", p, vt.astype(p.dtype),
+                             preferred_element_type=jnp.float32)
+            return out.transpose(0, 3, 1, 2, 4)           # (B,cq,Kh,G,dh)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, vt.astype(p.dtype),
+                          preferred_element_type=jnp.float32)
+
+    cq = min(ATTN_Q_CHUNK, sq)
+    qpos_all = q_offset + jnp.arange(sq)
+    if sq > cq:
+        pad = -sq % cq                  # pad q so every seq length chunks
+        qp = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        pp = jnp.pad(qpos_all, (0, pad), constant_values=-(10 ** 9))
+        nc = qp.shape[1] // cq
+        qs = qp.reshape(b, nc, cq, kh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+        out = jax.lax.map(chunk, (qs, pp.reshape(nc, cq)))  # (nc,B,cq,Kh,G,dh)
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nc * cq, h, dh)[:, :sq]
+    else:
+        out = chunk((qg, qpos_all)).reshape(b, sq, h, dh)
+    return out.astype(q.dtype)
+
+
+def attention(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+              mode: AttnMode, positions: jnp.ndarray,
+              cache: Optional[Params] = None, pos: Optional[jnp.ndarray] = None,
+              kv_src: Optional[jnp.ndarray] = None,
+              cache_len: Optional[int] = None, phase: str = "train"):
+    """Returns (out, new_cache). Modes:
+       * train/prefill: cache=None in, cache built when ``build_cache``;
+       * decode: cache given, x is (B,1,D), pos is the absolute position;
+       * cross: kv_src supplies encoder states (cached k/v reused if given).
+    """
+    b, s, d = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_src is None else kv_src
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", src, params["wk"]).reshape(b, src.shape[1], kh, dh)
+    v = jnp.einsum("bsd,de->bse", src, params["wv"]).reshape(b, src.shape[1], kh, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+
+    use_rope = cfg.rope_theta > 0 and mode.kind != "cross"
+    if mode.kind == "cross":
+        if cache is not None:  # decode: reuse projected encoder k/v
+            k, v = cache["k"], cache["v"]
+        kpos = jnp.arange(k.shape[1])
+        out = _sdpa_chunked(q, k, v, AttnMode("bidir"), 0, kpos,
+                            cfg.attn_probs_bf16, cfg.attn_scores_bf16,
+                            pretranspose=(phase == "train"))
+        new_cache = {"k": k, "v": v}
+    elif cache is None:   # train / prefill (self-attention)
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        kpos = jnp.arange(s)
+        out = _sdpa_chunked(q, k, v, mode, 0, kpos, cfg.attn_probs_bf16,
+                            cfg.attn_scores_bf16,
+                            pretranspose=(phase == "train"))
+        cap = s if cache_len is None else cache_len
+        if mode.window is not None:
+            cap = min(cap, mode.window)
+        keep = min(cap, s)
+        # ring invariant: position p lives in slot p % cap — align the kept
+        # tail so subsequent decode steps evict the true oldest. When the
+        # alignment is the identity (cap == s, the prefill_32k case) the
+        # slice aliases k/v directly — the scatter variant cost +7 GiB/dev
+        # peak residency (§Perf).
+        shift = (s - keep) % cap
+        tail_pos = jnp.arange(s - keep, s, dtype=jnp.int32)
+        if keep == cap and shift == 0:
+            kb, vb = k[:, s - keep:], v[:, s - keep:]
+            kposb = tail_pos
+        else:
+            idx = jnp.arange(s - keep, s) % cap
+            kb = jnp.zeros((b, cap) + k.shape[2:], k.dtype).at[:, idx].set(
+                k[:, s - keep:])
+            vb = jnp.zeros((b, cap) + v.shape[2:], v.dtype).at[:, idx].set(
+                v[:, s - keep:])
+            kposb = jnp.full((cap,), -1, jnp.int32).at[idx].set(tail_pos)
+        new_cache = {"k": kb, "v": vb, "kpos": kposb}
+    else:                 # decode (self-attention, ring-buffer cache)
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        cap = cache["k"].shape[1]
+        slot = pos % cap
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        ckpos = jax.lax.dynamic_update_slice(
+            cache["kpos"], pos[None].astype(jnp.int32), (slot,))
+        out = _sdpa_chunked(q, ck, cv, mode, pos, ckpos,
+                            cfg.attn_probs_bf16, cfg.attn_scores_bf16,
+                            pretranspose=False)
+        new_cache = {"k": ck, "v": cv, "kpos": ckpos}
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * dh), params["wo"])
+    return y, new_cache
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, cap: int):
+    dt = _dtype(cfg)
+    return {
+        "k": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim), dt),
+        "kpos": jnp.full((cap,), -1, jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wg": _dense_init(ks[0], (d, f)), "wu": _dense_init(ks[1], (d, f)),
+         "wd": _dense_init(ks[2], (f, d))}
+    return jax.tree.map(lambda a: a.astype(_dtype(cfg)), p)
+
+
+def mlp(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["wg"]).astype(jnp.float32))
+    up = jnp.einsum("bsd,df->bsf", x, params["wu"])
+    return jnp.einsum("bsf,fd->bsd", (gate * up.astype(jnp.float32)).astype(x.dtype),
+                      params["wd"])
+
+
+def _constrain(x, spec):
+    """with_sharding_constraint that degrades to identity when no mesh is
+    set (single-device smoke tests)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def _padded_experts(cfg: ArchConfig) -> int:
+    e = cfg.n_experts
+    return (e + 15) // 16 * 16 if cfg.pad_experts else e
+
+
+# --------------------------------------------------------------------- MoE
+def init_moe(key, cfg: ArchConfig) -> Params:
+    d, e = cfg.d_model, cfg.n_experts
+    ep = _padded_experts(cfg)
+    fe = cfg.d_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": _dense_init(ks[0], (d, e)),
+        "we_gate": _dense_init(ks[1], (ep, d, fe), scale_axis=1),
+        "we_up": _dense_init(ks[2], (ep, d, fe), scale_axis=1),
+        "we_down": _dense_init(ks[3], (ep, fe, d), scale_axis=1),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, cfg.n_shared_experts * fe)
+    return jax.tree.map(lambda a: a.astype(_dtype(cfg)), p)
+
+
+def moe(params: Params, x: jnp.ndarray, cfg: ArchConfig):
+    """Capacity-based top-k routing with sort-based grouping.
+
+    FLOPs are honest (E × capacity × d × d_ff with capacity ≈ T·k/E·factor),
+    unlike dense all-experts dispatch.  Returns (y, aux_loss).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, idx = jax.lax.top_k(probs, k)              # (t, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(t * k / e * cfg.moe_capacity))
+    flat_e = idx.reshape(-1)                              # (t*k,)
+    order = jnp.argsort(flat_e)                           # group tokens by expert
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))
+    rank = jnp.arange(t * k) - seg_start[sorted_e]        # position within expert
+    keep = rank < cap
+    # slot table (e, cap) -> flattened (token,k) index; sentinel t*k = empty.
+    # Dropped tokens scatter into a dump slot (e*cap) that is sliced away.
+    # Padded (dead) experts get all-empty rows — the router never emits them.
+    e_pad = params["we_gate"].shape[-3]
+    slot_id = sorted_e * cap + jnp.clip(rank, 0, cap - 1)
+    slots = jnp.full((e_pad * cap + 1,), t * k, jnp.int32)
+    slots = slots.at[jnp.where(keep, slot_id, e_pad * cap)].set(
+        jnp.where(keep, order, t * k).astype(jnp.int32))
+    slots = slots[: e_pad * cap].reshape(e_pad, cap)
+    tok_of_slot = jnp.clip(slots // k, 0, t - 1)
+    slot_valid = slots < t * k
+
+    xe = jnp.where(slot_valid[..., None], xf[tok_of_slot], 0)   # (e, cap, d)
+    if cfg.moe_shard_acts:
+        # §Perf: without constraints GSPMD replicates the dispatch tensors
+        # (88 GiB/dev for qwen2-moe prefill). Expert dim -> 'model' when it
+        # divides the 16-way axis, capacity -> 'data'.
+        espec = "model" if cfg.n_experts % 16 == 0 else None
+        cspec = "data" if espec == "model" else ("data", "model")
+        xe = _constrain(xe, jax.sharding.PartitionSpec(espec, cspec, None))
+    gate_ff = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["we_gate"])
+                          .astype(jnp.float32))
+    up = jnp.einsum("ecd,edf->ecf", xe, params["we_up"])
+    ye = jnp.einsum("ecf,efd->ecd", (gate_ff * up.astype(jnp.float32)
+                                     ).astype(x.dtype), params["we_down"])
+    if cfg.moe_shard_acts:
+        ye = _constrain(ye, jax.sharding.PartitionSpec(espec, cspec, None))
+    # combine: scatter-add back with gate weights
+    wslot = jnp.where(slot_valid, gate_vals.reshape(-1)[jnp.clip(slots, 0, t * k - 1)], 0)
+    y = jnp.zeros((t + 1, d), ye.dtype).at[
+        jnp.where(slot_valid, tok_of_slot, t)].add(
+        (ye * wslot[..., None]).astype(ye.dtype))[:t]
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], xf[None])[0]
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros((e,)).at[flat_e].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, s, d).astype(x.dtype), aux

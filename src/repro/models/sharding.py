@@ -1,0 +1,167 @@
+"""Sharding rules: parameter / optimizer / activation / cache PartitionSpecs.
+
+Strategy (DESIGN.md §6): 2-D "FSDP × tensor" sharding for every large matrix —
+one dim on ``model`` (tensor/expert parallel), the other on ``data`` (FSDP),
+so that optimizer state (f32 mu/nu = 6 bytes/param extra) fits HBM for the
+40B-scale configs.  Anything small or non-divisible is replicated — the
+roofline pass tells us which of those choices matter.
+
+Rules are *path-based* (leaf names are stable API), with divisibility checks
+against the actual mesh axis sizes; non-divisible dims fall back to
+replication rather than relying on GSPMD padding.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+# leaf name -> (spec builder) ; d = data axis name, m = model axis name
+_MATRIX_RULES = {
+    # (in, out) 2D projections: FSDP on in-dim, tensor on out-dim
+    "wq": ("d", "m"), "wk": ("d", "m"), "wv": ("d", "m"),
+    "wg": ("d", "m"), "wu": ("d", "m"), "w_in": ("d", "m"),
+    "in_proj": ("d", "m"), "wi": ("d", "m"), "wf": ("d", "m"),
+    # row-parallel outputs
+    "wo": ("m", "d"), "wd": ("m", "d"), "out_proj": ("m", "d"),
+    # square-ish
+    "vision_proj": ("d", "m"),
+    "lm_head": ("d", "m"),          # vocab on model => sharded logits/softmax
+    "embed": ("m", "d"),            # vocab on model
+}
+
+
+def _axis_ok(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _spec_for_matrix(shape, rule, axes: dict[str, Any], sizes: dict[str, int]):
+    """Apply a 2-trailing-dim rule with divisibility fallback; leading dims
+    (scan stacking, expert dim) get None."""
+    lead = [None] * (len(shape) - 2)
+    din, dout = shape[-2], shape[-1]
+    a_in = (axes[rule[0]] if axes[rule[0]] is not None
+            and _axis_ok(din, sizes[rule[0]]) else None)
+    a_out = (axes[rule[1]] if axes[rule[1]] is not None
+             and _axis_ok(dout, sizes[rule[1]]) else None)
+    if a_in is not None and a_in == a_out:
+        a_in = None
+    return P(*lead, a_in, a_out)
+
+
+def param_specs(params: Params, mesh: Mesh, mode: str = "train",
+                expert_data: bool = False) -> Params:
+    """PartitionSpec pytree for a params/grads pytree (path-name based).
+
+    mode="train": 2-D FSDP×tensor (optimizer state must shard over data).
+    mode="serve": tensor-parallel only — FSDP in-dim sharding makes every
+    matmul produce partial sums and all-reduce full activations (§Perf found
+    295 GB/dev of all-reduce on qwen2-moe prefill); at serving time there is
+    no optimizer state, so weights replicate over the data axes instead.
+    """
+    axes = {"d": _data_axis(mesh) if mode == "train" else None, "m": "model"}
+    sizes = {"d": _axis_size(mesh, axes["d"]) if mode == "train" else 0,
+             "m": _axis_size(mesh, "model")}
+    m_sz = sizes["m"]
+
+    def rule(path, leaf):
+        names = [getattr(k, "key", getattr(k, "idx", "")) for k in path]
+        name = str(names[-1])
+        shape = leaf.shape
+        if name in ("we_gate", "we_up", "we_down"):
+            # expert-parallel when E | model; else tensor-parallel inside expert
+            e_axis = len(shape) - 3
+            lead = [None] * e_axis
+            if expert_data:
+                # §Perf experiment: experts over the data axis (GSPMD pads
+                # 60 -> 64); contraction dims unsharded => no partial-sum
+                # all-reduce per expert matmul
+                if name == "we_down":
+                    return P(*lead, "data",
+                             "model" if _axis_ok(shape[-2], m_sz) else None,
+                             None)
+                return P(*lead, "data", None,
+                         "model" if _axis_ok(shape[-1], m_sz) else None)
+            if _axis_ok(shape[e_axis], m_sz):
+                fs = axes["d"] if _axis_ok(shape[-2], sizes["d"]) else None
+                return P(*lead, "model", fs, None)
+            if name == "we_down":
+                return P(*lead, None, "model" if _axis_ok(shape[-2], m_sz) else None, None)
+            return P(*lead, None, None, "model" if _axis_ok(shape[-1], m_sz) else None)
+        if name == "r":  # slstm per-head recurrence (4, H, dh, dh)
+            return _spec_for_matrix(shape, ("d", "m"), axes, sizes)
+        if name == "conv":  # (K, d_inner) depthwise
+            return (P(*[None] * (len(shape) - 1),
+                      "model" if _axis_ok(shape[-1], m_sz) else None))
+        if name in _MATRIX_RULES and len(shape) >= 2:
+            return _spec_for_matrix(shape, _MATRIX_RULES[name], axes, sizes)
+        return P()  # norms, gates, router, biases: replicated
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def opt_specs(opt_state: Params, pspecs: Params) -> Params:
+    """mu/nu shard like params; step replicated."""
+    return {"mu": pspecs, "nu": pspecs, "step": P()}
+
+
+def _data_axis(mesh: Mesh):
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data")
+    return "data"
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def batch_spec(batch_size: int, mesh: Mesh, extra_dims: int = 1) -> P:
+    """Shard the batch dim over as much of the data(+pod) axes as divides."""
+    d = _data_axis(mesh)
+    if _axis_ok(batch_size, _axis_size(mesh, d)):
+        return P(d, *[None] * extra_dims)
+    if isinstance(d, tuple) and _axis_ok(batch_size, mesh.shape["data"]):
+        return P("data", *[None] * extra_dims)
+    return P(*[None] * (extra_dims + 1))
+
+
+def cache_specs(cache: Params, batch: int, mesh: Mesh) -> Params:
+    """KV/SSM cache specs: batch on data axes when divisible; then the first
+    remaining dim divisible by the model axis gets 'model'."""
+    d = _data_axis(mesh)
+    d_ok = _axis_ok(batch, _axis_size(mesh, d))
+    m_sz = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        shape = leaf.shape
+        scanned = "units" in names
+        # layout: [units?] batch rest...  (kpos has no batch dim)
+        b_idx = 1 if scanned else 0
+        spec = [None] * len(shape)
+        if names[-1] == "kpos":
+            return P(*spec)
+        if len(shape) > b_idx and shape[b_idx] == batch and d_ok:
+            spec[b_idx] = d
+        for i in range(b_idx + 1, len(shape)):
+            if shape[i] % m_sz == 0 and shape[i] >= m_sz:
+                spec[i] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def named(mesh: Mesh, spec_tree: Params):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,311 @@
+"""Recurrent blocks: Mamba2 (SSD), mLSTM and sLSTM (xLSTM).
+
+TPU adaptation: Mamba2 and mLSTM share one *chunked matmul-form scan*
+(`chunked_ssd`) — the SSD duality: within a chunk the recurrence is evaluated
+as a decay-masked (L×L) attention-like matmul (MXU work), across chunks a
+small (H, P, N) state is carried by ``lax.scan``.  This avoids materializing
+(B, S, H, P, N) state trajectories (impossible at 32k/500k) and keeps HLO
+size O(1) in sequence length.
+
+mLSTM's normalizer state n_t is folded into the same machinery by augmenting
+the value vectors with a constant-1 channel: the last row of the carried
+state IS the normalizer (models/DESIGN trick, tested in test_models.py).
+
+sLSTM has true (non-associative) hidden-to-gate recurrence and is evaluated
+with a plain ``lax.scan`` over time — the paper's own position: sLSTM trades
+parallelism for memory mixing.
+
+Simplifications vs. the reference CUDA implementations (noted per DESIGN.md):
+n_groups=1 for Mamba2 B/C projections; conv1d over x only; exponential gates
+clipped to ±8 instead of carrying the max-stabilizer state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(key, shape, scale_axis=0):
+    return jax.random.normal(key, shape, jnp.float32) / math.sqrt(shape[scale_axis])
+
+
+# ------------------------------------------------------------- chunked SSD
+def chunked_ssd(a: jnp.ndarray, xin: jnp.ndarray, bk: jnp.ndarray,
+                cq: jnp.ndarray, h0: jnp.ndarray, chunk: int):
+    """Linear recurrence  h_t = a_t·h_{t-1} + xin_t ⊗ bk_t,  y_t = h_t·cq_t.
+
+    a: (B,S,H) per-head decay in (0,1]; xin: (B,S,H,P); bk,cq: (B,S,H,N);
+    h0: (B,H,P,N).  Returns (y (B,S,H,P), h_final).
+    """
+    b, s, h, p = xin.shape
+    n = bk.shape[-1]
+    lc = min(chunk, s)
+    if s % lc:  # pad to a chunk multiple with identity steps
+        pad = lc - s % lc
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bk = jnp.pad(bk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cq = jnp.pad(cq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = a.shape[1] // lc
+
+    def resh(z):
+        return z.reshape(b, nc, lc, *z.shape[2:]).swapaxes(0, 1)
+
+    ac, xc, bc, cc = resh(a), resh(xin), resh(bk), resh(cq)
+
+    def step(h, inp):
+        av, xv, bv, cv = inp                              # (B,lc,H,...)
+        la = jnp.log(jnp.clip(av.astype(jnp.float32), 1e-20, 1.0))
+        cs = jnp.cumsum(la, axis=1)                       # (B,lc,H) inclusive
+        # intra-chunk: decay-masked attention matmul (the SSD duality)
+        scores = jnp.einsum("blhn,bmhn->bhlm", cv.astype(jnp.float32),
+                            bv.astype(jnp.float32))
+        decay = jnp.exp(cs[:, :, None] - cs[:, None, :]).transpose(0, 3, 1, 2)
+        mask = jnp.tril(jnp.ones((lc, lc), bool))
+        w = jnp.where(mask[None, None], scores * decay, 0.0)
+        y = jnp.einsum("bhlm,bmhp->blhp", w, xv.astype(jnp.float32))
+        # inbound state
+        y += jnp.einsum("blhn,bhpn,blh->blhp", cv.astype(jnp.float32), h,
+                        jnp.exp(cs))
+        # outbound state
+        tot = cs[:, -1]                                   # (B,H)
+        carry_w = jnp.exp(tot[:, None] - cs)              # (B,lc,H)
+        h_new = h * jnp.exp(tot)[..., None, None] + jnp.einsum(
+            "blhp,blhn,blh->bhpn", xv.astype(jnp.float32),
+            bv.astype(jnp.float32), carry_w)
+        return h_new, y
+
+    h_fin, ys = jax.lax.scan(step, h0.astype(jnp.float32), (ac, xc, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(b, nc * lc, h, p)[:, :s]
+    return y.astype(xin.dtype), h_fin
+
+
+def ssd_decode_step(a, xin, bk, cq, h):
+    """Single-token recurrence update. Shapes as chunked_ssd with S=1."""
+    af = a.astype(jnp.float32)[:, 0]                      # (B,H)
+    h_new = h * af[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xin.astype(jnp.float32)[:, 0], bk.astype(jnp.float32)[:, 0])
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, cq.astype(jnp.float32)[:, 0])
+    return y[:, None].astype(xin.dtype), h_new
+
+
+# ----------------------------------------------------------------- Mamba2
+def init_mamba2(key, cfg: ArchConfig) -> Params:
+    d, di, n, hh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": _init(ks[0], (d, 2 * di + 2 * n + hh)),
+        "conv": _init(ks[1], (cfg.ssm_conv, di)) * 0.5,
+        "a_log": jnp.zeros((hh,), jnp.float32),          # A = exp(a_log) = 1
+        "dt_bias": jnp.full((hh,), -2.0, jnp.float32),   # softplus ≈ 0.13
+        "d_skip": jnp.ones((hh,), jnp.float32),
+        "out_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[5], (di, d)),
+    }
+    return jax.tree.map(lambda a_: a_.astype(_dtype(cfg)), p)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray]):
+    """Depthwise causal conv. x: (B,S,di); w: (K,di); state: (B,K-1,di)."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), xp[:, -(k - 1):]
+
+
+def mamba2_block(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+                 cache: Optional[Params] = None):
+    """Returns (y, new_cache). cache = {"h": (B,H,P,N), "conv": (B,K-1,di)}."""
+    b, s, _ = x.shape
+    di, n, hh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    p_dim = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xs, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    xs, conv_state = _causal_conv(xs, params["conv"],
+                                  None if cache is None else cache["conv"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(params["a_log"].astype(jnp.float32)))
+    xh = xs.reshape(b, s, hh, p_dim)
+    xin = xh * dt[..., None].astype(xh.dtype)
+    bk = jnp.broadcast_to(bmat[:, :, None, :], (b, s, hh, n))
+    cq = jnp.broadcast_to(cmat[:, :, None, :], (b, s, hh, n))
+
+    if cache is None or s > 1:
+        h0 = (jnp.zeros((b, hh, p_dim, n), jnp.float32) if cache is None
+              else cache["h"])
+        y, h_fin = chunked_ssd(a, xin, bk, cq, h0, cfg.ssm_chunk)
+    else:
+        y, h_fin = ssd_decode_step(a, xin, bk, cq, cache["h"])
+
+    y = y + xh * params["d_skip"].astype(jnp.float32).reshape(1, 1, hh, 1).astype(xh.dtype)
+    y = y.reshape(b, s, di)
+    from repro.models.layers import rmsnorm  # local import avoids cycle
+    y = rmsnorm(y, params["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"h": h_fin, "conv": conv_state}
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int) -> Params:
+    return {"h": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                              _dtype(cfg))}
+
+
+# ------------------------------------------------------------------ mLSTM
+def init_mlstm(key, cfg: ArchConfig) -> Params:
+    d, di, n, hh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": _init(ks[0], (d, 2 * di)),
+        "wq": _init(ks[1], (di, hh * n)),
+        "wk": _init(ks[2], (di, hh * n)),
+        "wi": _init(ks[3], (di, hh)),
+        "wf": _init(ks[4], (di, hh)),
+        "out_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[5], (di, d)),
+    }
+    return jax.tree.map(lambda a_: a_.astype(_dtype(cfg)), p)
+
+
+def mlstm_block(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+                cache: Optional[Params] = None):
+    """Matrix-memory LSTM as augmented SSD (normalizer = extra value channel).
+    cache = {"h": (B,H,P+1,N)}."""
+    b, s, _ = x.shape
+    di, n, hh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    p_dim = di // hh
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", xi, params["wq"]).reshape(b, s, hh, n)
+    k = jnp.einsum("bse,ef->bsf", xi, params["wk"]).reshape(b, s, hh, n) / math.sqrt(n)
+    igate = jnp.exp(jnp.clip(jnp.einsum("bse,eh->bsh", xi, params["wi"])
+                             .astype(jnp.float32), -8.0, 8.0))
+    fgate = jax.nn.sigmoid(jnp.einsum("bse,eh->bsh", xi, params["wf"])
+                           .astype(jnp.float32))
+    v = xi.reshape(b, s, hh, p_dim)
+    # normalizer state as a separate 1-channel recurrence (same decay/keys)
+    # instead of a concatenated ones-channel: the concat's fwd pad + bwd
+    # slice/pad chain inside the unit scan was 45% of xlstm's HBM bytes
+    # (§Perf profile); two scans share everything but the value width.
+    ig = igate[..., None].astype(v.dtype)
+    vin = v * ig
+    nin = ig[..., :1] * jnp.ones((b, s, hh, 1), v.dtype)
+
+    if cache is None or s > 1:
+        hv0, hn0 = ((jnp.zeros((b, hh, p_dim, n), jnp.float32),
+                     jnp.zeros((b, hh, 1, n), jnp.float32))
+                    if cache is None else
+                    (cache["h"][:, :, :p_dim], cache["h"][:, :, p_dim:]))
+        f = fgate.astype(x.dtype)
+        yv, hv = chunked_ssd(f, vin, k, q, hv0, cfg.ssm_chunk)
+        yn, hn = chunked_ssd(f, nin, k, q, hn0, cfg.ssm_chunk)
+    else:
+        hv0 = cache["h"][:, :, :p_dim]
+        hn0 = cache["h"][:, :, p_dim:]
+        f = fgate.astype(x.dtype)
+        yv, hv = ssd_decode_step(f, vin, k, q, hv0)
+        yn, hn = ssd_decode_step(f, nin, k, q, hn0)
+    h_fin = jnp.concatenate([hv, hn], axis=2)     # keep cache layout (P+1, N)
+    denom = yn[..., 0]
+    yv = yv / jnp.maximum(jnp.abs(denom), 1.0)[..., None]
+    yv = yv.reshape(b, s, di)
+    from repro.models.layers import rmsnorm
+    yv = rmsnorm(yv, params["out_norm"], cfg.norm_eps)
+    yv = yv * jax.nn.silu(z.astype(jnp.float32)).astype(yv.dtype)
+    out = jnp.einsum("bse,ed->bsd", yv, params["out_proj"])
+    return out, {"h": h_fin}
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int) -> Params:
+    hh = cfg.n_ssm_heads
+    return {"h": jnp.zeros((batch, hh, cfg.d_inner // hh + 1, cfg.ssm_state),
+                           jnp.float32)}
+
+
+# ------------------------------------------------------------------ sLSTM
+def init_slstm(key, cfg: ArchConfig) -> Params:
+    d, di, hh = cfg.d_model, cfg.d_inner, cfg.n_ssm_heads
+    dh = di // hh
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_in": _init(ks[0], (d, 4 * di)),               # i, f, z, o pre-acts
+        "r": _init(ks[1], (4, hh, dh, dh), scale_axis=2),  # per-head recurrence
+        "in_norm": jnp.ones((d,), jnp.float32),
+        "out_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[2], (di, d)),
+    }
+    return jax.tree.map(lambda a_: a_.astype(_dtype(cfg)), p)
+
+
+def _slstm_cell(params, xt, state, cfg):
+    """One sLSTM step. xt: (B,4*di) pre-activations; state: (c,n,h) (B,H,dh)."""
+    c, nrm, h = state
+    hh = cfg.n_ssm_heads
+    dh = cfg.d_inner // hh
+    rec = jnp.einsum("bhp,ghpq->gbhq", h, params["r"].astype(jnp.float32))
+    pre = xt.astype(jnp.float32).reshape(xt.shape[0], 4, hh, dh).swapaxes(0, 1) + rec
+    i = jnp.exp(jnp.clip(pre[0], -8.0, 8.0))
+    f = jax.nn.sigmoid(pre[1])
+    z = jnp.tanh(pre[2])
+    o = jax.nn.sigmoid(pre[3])
+    c_new = f * c + i * z
+    n_new = f * nrm + i
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (c_new, n_new, h_new)
+
+
+def slstm_block(params: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+                cache: Optional[Params] = None):
+    """True recurrence: lax.scan over time. cache = {"c","n","h"} (B,H,dh)."""
+    b, s, _ = x.shape
+    hh = cfg.n_ssm_heads
+    dh = cfg.d_inner // hh
+    from repro.models.layers import rmsnorm
+    xn = rmsnorm(x, params["in_norm"], cfg.norm_eps)
+    pre = jnp.einsum("bsd,de->bse", xn, params["w_in"])   # (B,S,4di)
+
+    if cache is None:
+        st = tuple(jnp.zeros((b, hh, dh), jnp.float32) for _ in range(3))
+    else:
+        st = (cache["c"], cache["n"], cache["h"])
+
+    if s == 1 and cache is not None:
+        st = _slstm_cell(params, pre[:, 0], st, cfg)
+        ys = st[2][:, None]
+    else:
+        def step(carry, xt):
+            new = _slstm_cell(params, xt, carry, cfg)
+            return new, new[2]
+        st, ys = jax.lax.scan(step, st, pre.swapaxes(0, 1))
+        ys = ys.swapaxes(0, 1)                            # (B,S,H,dh)
+
+    y = ys.reshape(b, s, hh * dh).astype(x.dtype)
+    y = rmsnorm(y, params["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"c": st[0], "n": st[1], "h": st[2]}
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int) -> Params:
+    hh = cfg.n_ssm_heads
+    dh = cfg.d_inner // hh
+    z = jnp.zeros((batch, hh, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z}

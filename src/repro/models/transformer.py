@@ -1,0 +1,353 @@
+"""Model assembly: pattern-unit scan over heterogeneous block stacks.
+
+A model is ``embed -> scan(pattern units) -> tail blocks -> norm -> lm_head``
+where a *unit* is one repetition of ``cfg.pattern`` (e.g. zamba2's
+5×mamba2 + 1×shared-attn).  Scanning stacked unit params keeps HLO size and
+compile time O(1) in depth.  Weight-tied blocks (``attn_shared``) live
+outside the scan and are closed over — one copy of the weights, per-unit KV
+caches.
+
+Three entry points, matching the assigned input shapes:
+  * ``forward_train``  — full-sequence causal logits (train_4k);
+  * ``prefill``        — logits for the last position + a populated cache
+                         (prefill_32k);
+  * ``decode_step``    — ONE token against a ring-buffer cache
+                         (decode_32k / long_500k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, ssm
+from repro.models.layers import AttnMode, attention, mlp, moe, rmsnorm
+
+Params = dict[str, Any]
+
+
+# ------------------------------------------------------------------- init
+def _init_block(key, kind: str, cfg: ArchConfig, *, bidir: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "attn_shared"):
+        p: Params = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": layers.init_attention(ks[0], cfg),
+        }
+        if cfg.n_experts and not bidir:
+            p["ffn"] = layers.init_moe(ks[1], cfg)
+        else:
+            p["ffn"] = layers.init_mlp(ks[1], cfg)
+        if cfg.cross_attention and not bidir:
+            p["ln_cross"] = jnp.ones((cfg.d_model,), jnp.float32)
+            p["cross"] = layers.init_attention(ks[2], cfg)
+        return p
+    if kind == "mamba2":
+        return {"ln": jnp.ones((cfg.d_model,), jnp.float32),
+                **{"core": ssm.init_mamba2(ks[0], cfg)}}
+    if kind == "mlstm":
+        return {"ln": jnp.ones((cfg.d_model,), jnp.float32),
+                "core": ssm.init_mlstm(ks[0], cfg)}
+    if kind == "slstm":
+        return {"ln": jnp.ones((cfg.d_model,), jnp.float32),
+                "core": ssm.init_slstm(ks[0], cfg)}
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8 + len(cfg.pattern))
+    d, v = cfg.d_model, cfg.vocab
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (v, d), jnp.float32) * 0.02).astype(dt),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": (jax.random.normal(keys[1], (d, v), jnp.float32)
+                    / math.sqrt(d)).astype(dt),
+    }
+    # scanned units: stack per pattern position
+    units: Params = {}
+    for j, kind in enumerate(cfg.pattern):
+        if kind == "attn_shared":
+            units[f"blk{j}"] = {}
+            continue
+        sub = jax.random.split(keys[2 + j], cfg.n_units)
+        units[f"blk{j}"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_init_block(k, kind, cfg) for k in sub])
+    params["units"] = units
+    if cfg.tail_blocks:
+        tk = jax.random.split(keys[-1], len(cfg.tail_blocks))
+        params["tail"] = [
+            _init_block(tk[i], kind, cfg) if kind != "attn_shared" else {}
+            for i, kind in enumerate(cfg.tail_blocks)]
+    if "attn_shared" in cfg.pattern or "attn_shared" in cfg.tail_blocks:
+        params["shared_attn"] = _init_block(keys[-2], "attn", cfg)
+    if cfg.enc_layers:
+        ek = jax.random.split(keys[-3], cfg.enc_layers)
+        params["enc"] = {"units": {"blk0": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_init_block(k, "attn", cfg, bidir=True) for k in ek])}}
+    if cfg.n_patches:
+        params["vision_proj"] = (jax.random.normal(keys[-4], (d, d), jnp.float32)
+                                 / math.sqrt(d)).astype(dt)
+    return params
+
+
+# ---------------------------------------------------------------- context
+@dataclasses.dataclass
+class Ctx:
+    phase: str                      # "train" | "prefill" | "decode"
+    positions: jnp.ndarray          # (B,S) or (3,B,S) rope positions
+    pos: Optional[jnp.ndarray]      # decode: absolute position scalar
+    shared_params: Optional[Params] = None
+    enc_out: Optional[jnp.ndarray] = None
+    bidir: bool = False
+    cache_len: Optional[int] = None   # prefill: cache capacity headroom
+
+
+# ------------------------------------------------------------ block apply
+def apply_block(kind: str, bp: Params, x: jnp.ndarray, cfg: ArchConfig,
+                ctx: Ctx, cache: Optional[Params]):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_shared"):
+        p = ctx.shared_params if kind == "attn_shared" else bp
+        mode = AttnMode("bidir" if ctx.bidir else "causal",
+                        window=cfg.sliding_window)
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        out, self_cache = attention(
+            p["attn"], h, cfg, mode=mode, positions=ctx.positions,
+            cache=None if cache is None else cache.get("self"), pos=ctx.pos,
+            cache_len=ctx.cache_len, phase=ctx.phase)
+        # named for the "attn_out" remat policy: saving this (B,S,H·dh)
+        # tensor lets the backward pass skip recomputing the S×S chain
+        from jax.ad_checkpoint import checkpoint_name
+        out = checkpoint_name(out, "attn_out")
+        x = x + out
+        new_cache: Params = {"self": self_cache}
+        if "cross" in p and not ctx.bidir:
+            h = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+            out, cross_cache = attention(
+                p["cross"], h, cfg, mode=AttnMode("cross"),
+                positions=ctx.positions,
+                cache=None if cache is None else cache.get("cross"),
+                kv_src=ctx.enc_out, phase=ctx.phase)
+            x = x + out
+            new_cache["cross"] = cross_cache
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.n_experts and not ctx.bidir:
+            out, aux = moe(p["ffn"], h, cfg)
+        else:
+            out = mlp(p["ffn"], h)
+        return x + out, new_cache, aux
+
+    h = rmsnorm(x, bp["ln"], cfg.norm_eps)
+    fn = {"mamba2": ssm.mamba2_block, "mlstm": ssm.mlstm_block,
+          "slstm": ssm.slstm_block}[kind]
+    out, new_cache = fn(bp["core"], h, cfg, cache=cache)
+    return x + out, new_cache, aux
+
+
+def _run_stack(params: Params, x: jnp.ndarray, cfg: ArchConfig, ctx: Ctx,
+               cache: Optional[Params], pattern: tuple[str, ...],
+               units_key: str = "units", tail: bool = True):
+    """Scan over stacked pattern units, then the unscanned tail."""
+    units = params[units_key]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def unit_body(carry, xs):
+        h, aux_acc = carry
+        up, ucache = xs
+        new_caches = {}
+        for j, kind in enumerate(pattern):
+            c_j = None if ucache is None else ucache.get(f"blk{j}")
+            h, nc, aux = apply_block(kind, up[f"blk{j}"], h, cfg, ctx, c_j)
+            new_caches[f"blk{j}"] = nc
+            aux_acc = aux_acc + aux
+        return (h, aux_acc), new_caches
+
+    if ctx.phase == "train" and cfg.remat != "none":
+        policy = {
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            "attn_out": jax.checkpoint_policies.save_only_these_names(
+                "attn_out"),
+        }.get(cfg.remat)
+        unit_body = jax.checkpoint(unit_body, policy=policy)
+
+    ucache = None if cache is None else cache[units_key]
+    n_units = len(cfg.pattern) and (cfg.n_units if units_key == "units"
+                                    else cfg.enc_layers)
+    if n_units > 0:
+        if ucache is None:
+            (x, aux_total), new_ucache = jax.lax.scan(
+                lambda c, p: unit_body((c[0], c[1]), (p, None)),
+                (x, aux_total), units)
+        else:
+            (x, aux_total), new_ucache = jax.lax.scan(
+                unit_body, (x, aux_total), (units, ucache))
+    else:
+        new_ucache = {}
+
+    new_tail = []
+    if tail and cfg.tail_blocks and units_key == "units":
+        tcache = None if cache is None else cache.get("tail")
+        for i, kind in enumerate(cfg.tail_blocks):
+            c_i = None if tcache is None else tcache[i]
+            x, nc, aux = apply_block(kind, params["tail"][i], x, cfg, ctx, c_i)
+            new_tail.append(nc)
+            aux_total = aux_total + aux
+    return x, {units_key: new_ucache, "tail": new_tail}, aux_total
+
+
+# ----------------------------------------------------------------- embeds
+def _positions_for(cfg: ArchConfig, batch: int, seq: int,
+                   offset) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.mrope_sections is None:
+        return pos
+    # M-RoPE: vision prefix uses an (h, w) grid with t=0; text advances t.
+    p = cfg.n_patches
+    g = max(1, int(math.sqrt(max(p, 1))))
+    idx = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    is_text = idx >= p
+    t = jnp.where(is_text, idx - p, 0)
+    hpos = jnp.where(is_text, idx - p, jnp.clip(idx, 0, p - 1) // g)
+    wpos = jnp.where(is_text, idx - p, jnp.clip(idx, 0, p - 1) % g)
+    return jnp.broadcast_to(jnp.stack([t, hpos, wpos]), (3, batch, seq))
+
+
+def _embed(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+           extras: Optional[Params], offset=0) -> jnp.ndarray:
+    x = params["embed"][tokens]
+    if cfg.n_patches and extras is not None and "patches" in extras:
+        proj = jnp.einsum("bpd,de->bpe", extras["patches"].astype(x.dtype),
+                          params["vision_proj"])
+        x = jnp.concatenate([proj, x[:, cfg.n_patches:]], axis=1)
+    if cfg.rope_theta == 0:  # whisper: sinusoidal absolute positions
+        pos = jnp.arange(tokens.shape[1], dtype=jnp.int32) + offset
+        x = x + layers.sinusoidal_positions(pos, cfg.d_model)[None].astype(x.dtype)
+    return x
+
+
+def _encode(params: Params, frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings (B, enc_frames, D)."""
+    x = frames + layers.sinusoidal_positions(
+        jnp.arange(frames.shape[1]), cfg.d_model)[None].astype(frames.dtype)
+    ctx = Ctx(phase="train", positions=jnp.zeros((1, 1), jnp.int32), pos=None,
+              bidir=True)
+    x, _, _ = _run_stack(params, x, cfg, ctx, None, ("attn",),
+                         units_key="enc_units", tail=False)
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------ entry points
+def forward_train(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+                  extras: Optional[Params] = None):
+    """(B,S) tokens -> (B,S,V) logits, aux loss."""
+    b, s = tokens.shape
+    enc_out = None
+    if cfg.enc_layers:
+        enc_out = _encode({"enc_units": params["enc"]["units"],
+                           "enc_norm": params["final_norm"]},
+                          extras["frames"], cfg)
+    x = _embed(params, tokens, cfg, extras)
+    ctx = Ctx(phase="train", positions=_positions_for(cfg, b, s, 0), pos=None,
+              shared_params=params.get("shared_attn"), enc_out=enc_out)
+    x, _, aux = _run_stack(params, x, cfg, ctx, None, cfg.pattern)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, aux
+
+
+def prefill(params: Params, tokens: jnp.ndarray, cfg: ArchConfig,
+            extras: Optional[Params] = None,
+            cache_len: Optional[int] = None):
+    """Populate caches; return (last-position logits, cache)."""
+    b, s = tokens.shape
+    enc_out = None
+    if cfg.enc_layers:
+        enc_out = _encode({"enc_units": params["enc"]["units"],
+                           "enc_norm": params["final_norm"]},
+                          extras["frames"], cfg)
+    x = _embed(params, tokens, cfg, extras)
+    ctx = Ctx(phase="prefill", positions=_positions_for(cfg, b, s, 0), pos=None,
+              shared_params=params.get("shared_attn"), enc_out=enc_out,
+              cache_len=cache_len)
+    x, cache, _ = _run_stack(params, x, cfg, ctx, _empty_cache_like(cfg), cfg.pattern)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits[:, 0], cache
+
+
+def decode_step(params: Params, cache: Params, token: jnp.ndarray,
+                pos: jnp.ndarray, cfg: ArchConfig):
+    """One token (B,1) + ring-buffer cache -> (logits (B,V), new cache)."""
+    b = token.shape[0]
+    x = _embed(params, token, cfg, None, offset=pos)
+    positions = _positions_for(cfg, b, 1, pos)
+    ctx = Ctx(phase="decode", positions=positions, pos=pos,
+              shared_params=params.get("shared_attn"))
+    x, new_cache, _ = _run_stack(params, x, cfg, ctx, cache, cfg.pattern)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits[:, 0], new_cache
+
+
+# ------------------------------------------------------------------ cache
+def _empty_cache_like(cfg: ArchConfig):
+    """Sentinel: prefill builds its cache from scratch (no cache inputs) —
+    but apply_block still needs a mapping to .get() from."""
+    return None
+
+
+def _block_cache(kind: str, cfg: ArchConfig, batch: int, cap: int) -> Params:
+    if kind in ("attn", "attn_shared"):
+        c: Params = {"self": layers.init_attn_cache(cfg, batch, cap)}
+        if cfg.cross_attention:
+            dt = jnp.dtype(cfg.dtype)
+            c["cross"] = {
+                "k": jnp.zeros((batch, cfg.enc_frames, cfg.n_kv_heads,
+                                cfg.head_dim), dt),
+                "v": jnp.zeros((batch, cfg.enc_frames, cfg.n_kv_heads,
+                                cfg.head_dim), dt)}
+        return c
+    if kind == "mamba2":
+        return ssm.init_mamba2_cache(cfg, batch)
+    if kind == "mlstm":
+        return ssm.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return ssm.init_slstm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def make_cache(cfg: ArchConfig, batch: int, seq_len: int) -> Params:
+    """Decode cache for a context of ``seq_len`` (capacity = window if SWA)."""
+    cap = seq_len if cfg.sliding_window is None else min(cfg.sliding_window,
+                                                         seq_len)
+    units = {}
+    for j, kind in enumerate(cfg.pattern):
+        one = _block_cache(kind, cfg, batch, cap)
+        units[f"blk{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_units, *a.shape)), one)
+    tail = [_block_cache(kind, cfg, batch, cap) for kind in cfg.tail_blocks]
+    return {"units": units, "tail": tail}
+
+
+# ------------------------------------------------------------------- loss
+def lm_loss(params: Params, batch: Params, cfg: ArchConfig):
+    logits, aux = forward_train(params, batch["tokens"], cfg,
+                                extras={k: v for k, v in batch.items()
+                                        if k not in ("tokens",)})
+    labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], -1)[..., 0]
+    mask = jnp.ones_like(gold).at[:, -1].set(0.0)
+    ce = ((lse - gold) * mask).sum() / mask.sum()
+    return ce + 0.01 * aux, (ce, aux)

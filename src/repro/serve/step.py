@@ -1,0 +1,30 @@
+"""Serving steps: prefill and single-token decode against a ring-buffer cache.
+
+``serve_step`` is what decode_32k / long_500k lower: ONE new token with a KV
+(or SSM-state) cache of the context length.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+
+Params = Any
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        extras = {k: v for k, v in batch.items() if k != "tokens"}
+        return transformer.prefill(params, batch["tokens"], cfg, extras)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, token, pos):
+        return transformer.decode_step(params, cache, token, pos, cfg)
+    return serve_step
+
+
+def make_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    return transformer.make_cache(cfg, batch, seq_len)

@@ -1,0 +1,57 @@
+"""AdamW + LR schedule, implemented directly on pytrees (no optax on box).
+
+Optimizer state shards exactly like the params (the dry-run relies on this:
+mu/nu inherit the param PartitionSpecs).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def adamw_init(params: Params) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params: Params, grads: Params, state: dict, *, lr: float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.01) -> tuple[Params, dict]:
+    step = state["step"] + 1
+    sf = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** sf
+    c2 = 1.0 - b2 ** sf
+
+    def upd(p, g, mu, nu):
+        gf = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * gf
+        nu = b2 * nu + (1 - b2) * gf * gf
+        upd_ = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (upd_ + weight_decay * pf)
+        return pf.astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+def cosine_lr(step: jnp.ndarray, *, peak: float, warmup: int, total: int,
+              floor_frac: float = 0.1) -> jnp.ndarray:
+    sf = step.astype(jnp.float32)
+    warm = peak * sf / max(warmup, 1)
+    prog = jnp.clip((sf - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(sf < warmup, warm, cos)

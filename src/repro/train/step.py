@@ -1,0 +1,58 @@
+"""Training step: microbatched grad accumulation + AdamW.
+
+Global batches (256 × 4k tokens) can't materialize logits in one shot; the
+step scans over microbatches accumulating f32 grads — the standard
+production pattern, and what the dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.train import optim
+
+Params = Any
+
+
+def make_train_step(cfg: ArchConfig, *, micro_batch: int = 0, lr: float = 3e-4):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Remat is governed by cfg.remat (per-unit checkpoint inside the scan)."""
+
+    def one_grad(params, mb):
+        (loss, (ce, aux)), g = jax.value_and_grad(
+            transformer.lm_loss, has_aux=True)(params, mb, cfg)
+        del aux
+        return loss, ce, g
+
+    def train_step(params, opt_state, batch):
+        b = batch["tokens"].shape[0]
+        mb_size = micro_batch or b
+        n_micro = max(b // mb_size, 1)
+        if n_micro == 1:
+            loss, ce, grads = one_grad(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda a: a.reshape(n_micro, mb_size, *a.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                g_acc, l_acc, c_acc = carry
+                loss, ce, g = one_grad(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss, c_acc + ce), None
+
+            (grads, loss, ce), _ = jax.lax.scan(
+                body, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss, ce = loss / n_micro, ce / n_micro
+
+        params, opt_state = optim.adamw_update(params, grads, opt_state, lr=lr)
+        return params, opt_state, {"loss": loss, "ce": ce}
+
+    return train_step

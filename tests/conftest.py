@@ -1,0 +1,5 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device. The 512-device
+# dry-run sets XLA_FLAGS itself in launch/dryrun.py __main__ (never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

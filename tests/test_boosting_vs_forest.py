@@ -1,0 +1,33 @@
+"""Cross-model integration: boosting vs forest on the same vertical data,
+plus the F-LR ordering the paper's Table 1 exhibits."""
+import numpy as np
+
+from repro.core import ForestParams, FederatedForest
+from repro.core.boosting import BoostParams, FederatedBoosting
+from repro.core.fedlinear import FederatedLinear, split_columns
+from repro.core.party import make_vertical_partition
+from repro.data import make_classification
+from repro.data.metrics import accuracy
+
+
+def test_all_three_federated_models_on_shared_partition():
+    x, y = make_classification(800, 24, 2, n_informative=8, seed=21)
+    xtr, ytr, xte, yte = x[:600], y[:600], x[600:], y[600:]
+    part = make_vertical_partition(xtr, 3, 32)
+
+    ff = FederatedForest(ForestParams(n_estimators=10, max_depth=6,
+                                      n_bins=32, seed=4)).fit(part, ytr)
+    fb = FederatedBoosting(BoostParams(task="binary", n_rounds=20,
+                                       max_depth=3)).fit(part, ytr)
+    fl = FederatedLinear().fit(split_columns(xtr, 3), ytr)
+
+    accs = {
+        "forest": accuracy(yte, ff.predict(xte)),
+        "boosting": accuracy(yte, fb.predict(xte)),
+        "linear": accuracy(yte, fl.predict(split_columns(xte, 3))),
+    }
+    for name, a in accs.items():
+        assert a > 0.75, (name, a)
+    # tree ensembles should at least match the linear baseline on this
+    # blob-generated (linearly-separable-ish) data
+    assert max(accs["forest"], accs["boosting"]) >= accs["linear"] - 0.05

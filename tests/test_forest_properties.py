@@ -1,0 +1,85 @@
+"""Hypothesis property tests on the system's invariants.
+
+Invariants under test:
+  P1  (paper Prop. 1) one-round intersection prediction == classical routed
+      prediction, for arbitrary data/partitions/params.
+  P2  losslessness: FF(M) == FF(1), arbitrary M and contiguous partitions.
+  P3  leaf partition: in the complete tree, every test sample lands in exactly
+      one leaf per tree (S^l ∩ S^g = ∅ and ∪ S^l = all).
+  P4  membership monotonicity: a party's candidate leaf set is always a
+      superset of the true assignment (w* ⊆ W_i in the paper's proof).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ForestParams, fit_federated_forest, prediction, protocol
+from repro.data import make_classification
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@st.composite
+def forest_case(draw):
+    seed = draw(st.integers(0, 10_000))
+    n = draw(st.integers(60, 220))
+    f = draw(st.integers(3, 18))
+    m = draw(st.integers(2, min(6, f)))
+    depth = draw(st.integers(2, 5))
+    n_bins = draw(st.sampled_from([4, 8, 16]))
+    n_estimators = draw(st.integers(1, 4))
+    n_classes = draw(st.sampled_from([2, 3]))
+    x, y = make_classification(n, f, n_classes, seed=seed)
+    p = ForestParams(n_classes=n_classes, n_estimators=n_estimators,
+                     max_depth=depth, n_bins=n_bins, seed=seed % 97)
+    return x, y, m, p
+
+
+@given(forest_case())
+@settings(**SETTINGS)
+def test_p1_oneround_equals_classical(case):
+    x, y, m, p = case
+    ff = fit_federated_forest(x, y, m, p)
+    np.testing.assert_array_equal(ff.predict(x), ff.predict_classical(x))
+
+
+@given(forest_case())
+@settings(**SETTINGS)
+def test_p2_lossless_vs_centralized(case):
+    x, y, m, p = case
+    central = fit_federated_forest(x, y, 1, p)
+    fed = fit_federated_forest(x, y, m, p)
+    np.testing.assert_array_equal(central.predict(x), fed.predict(x))
+
+
+def _leaf_masks(ff, x):
+    """(M, T, N, nn) per-party candidate masks + (T, N, nn) intersection."""
+    xb = ff.partition_.bin_test(x)
+
+    def per_party(trees, xbp):
+        def one(t):
+            return prediction.tree_leaf_membership(t, xbp, ff.params)
+        return jax.lax.map(one, trees)
+
+    mem = protocol.run_simulated(per_party, (ff.trees_, jnp.asarray(xb)))
+    return np.asarray(mem), np.asarray(mem.all(0))
+
+
+@given(forest_case())
+@settings(**SETTINGS)
+def test_p3_exactly_one_leaf_per_sample(case):
+    x, y, m, p = case
+    ff = fit_federated_forest(x, y, m, p)
+    _, inter = _leaf_masks(ff, x)
+    assert (inter.sum(-1) == 1).all(), "complete-tree leaves must partition samples"
+
+
+@given(forest_case())
+@settings(**SETTINGS)
+def test_p4_party_masks_superset_of_truth(case):
+    x, y, m, p = case
+    ff = fit_federated_forest(x, y, m, p)
+    mem, inter = _leaf_masks(ff, x)
+    for i in range(m):
+        assert (mem[i] >= inter).all(), "w* must be a subset of every W_i"

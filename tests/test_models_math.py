@@ -1,0 +1,165 @@
+"""Math-level tests for model internals: the chunked SSD scan vs a naive
+step-by-step recurrence oracle, RoPE/M-RoPE properties, MoE routing
+invariants, ring-buffer cache semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.configs.base import reduced
+from repro.models import layers, ssm
+
+
+# ---------------------------------------------------------------- SSD scan
+def _naive_recurrence(a, xin, bk, cq, h0):
+    """h_t = a_t h_{t-1} + xin_t ⊗ bk_t ; y_t = h_t · cq_t  (per head)."""
+    b, s, h, p = xin.shape
+    n = bk.shape[-1]
+    hcur = np.array(h0, np.float64)
+    ys = np.zeros((b, s, h, p))
+    for t in range(s):
+        hcur = (hcur * a[:, t, :, None, None]
+                + np.einsum("bhp,bhn->bhpn", xin[:, t], bk[:, t]))
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", hcur, cq[:, t])
+    return ys, hcur
+
+
+@pytest.mark.parametrize("s,chunk", [(16, 4), (17, 4), (32, 32), (7, 16)])
+def test_chunked_ssd_matches_naive(s, chunk):
+    rng = np.random.default_rng(s)
+    b, h, p, n = 2, 3, 4, 5
+    a = rng.uniform(0.6, 1.0, (b, s, h))
+    xin = rng.normal(size=(b, s, h, p))
+    bk = rng.normal(size=(b, s, h, n))
+    cq = rng.normal(size=(b, s, h, n))
+    h0 = rng.normal(size=(b, h, p, n))
+    want_y, want_h = _naive_recurrence(a, xin, bk, cq, h0)
+    got_y, got_h = ssm.chunked_ssd(
+        jnp.asarray(a, jnp.float32), jnp.asarray(xin, jnp.float32),
+        jnp.asarray(bk, jnp.float32), jnp.asarray(cq, jnp.float32),
+        jnp.asarray(h0, jnp.float32), chunk)
+    np.testing.assert_allclose(got_y, want_y, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(got_h, want_h, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_decode_step_matches_scan_tail():
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 1, 9, 2, 3, 4
+    a = jnp.asarray(rng.uniform(0.5, 1.0, (b, s, h)), jnp.float32)
+    xin = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    bk = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    cq = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    y_all, h_all = ssm.chunked_ssd(a, xin, bk, cq, h0, chunk=4)
+    # run first s-1 steps, then one decode step
+    y_pre, h_pre = ssm.chunked_ssd(a[:, :-1], xin[:, :-1], bk[:, :-1],
+                                   cq[:, :-1], h0, chunk=4)
+    y_last, h_last = ssm.ssd_decode_step(a[:, -1:], xin[:, -1:], bk[:, -1:],
+                                         cq[:, -1:], h_pre)
+    np.testing.assert_allclose(y_last[:, 0], y_all[:, -1], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h_last, h_all, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 40), st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_ssd_state_decay_bound(s, chunk):
+    """With |decay|<=1 and bounded inputs the state norm stays bounded
+    (numerical-stability property the 500k-decode path relies on)."""
+    rng = np.random.default_rng(s * 7 + chunk)
+    b, h, p, n = 1, 2, 3, 3
+    a = jnp.asarray(rng.uniform(0.0, 1.0, (b, s, h)), jnp.float32)
+    xin = jnp.asarray(rng.uniform(-1, 1, (b, s, h, p)), jnp.float32)
+    bk = jnp.asarray(rng.uniform(-1, 1, (b, s, h, n)), jnp.float32)
+    cq = jnp.asarray(rng.uniform(-1, 1, (b, s, h, n)), jnp.float32)
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    y, hf = ssm.chunked_ssd(a, xin, bk, cq, h0, chunk)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.abs(np.asarray(hf)).max() <= s * np.sqrt(p * n) + 1e-3
+
+
+# ------------------------------------------------------------------- RoPE
+def test_rope_preserves_norm_and_relativity():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+    pos = jnp.arange(8)[None, :]
+    y = layers.apply_rope(x, pos, theta=1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rot(q,i), rot(k,j)> depends only on i-j
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    def dot_at(i, j):
+        qi = layers.apply_rope(q, jnp.array([[i]]), 1e4)
+        kj = layers.apply_rope(k, jnp.array([[j]]), 1e4)
+        return float(jnp.sum(qi * kj))
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)
+    assert dot_at(3, 1) != pytest.approx(dot_at(3, 2), rel=1e-3)
+
+
+def test_mrope_sections_cover_head_dim():
+    cfg = registry.get("qwen2-vl-2b")
+    assert sum(cfg.mrope_sections) == cfg.head_dim // 2
+    x = jnp.ones((1, 4, 2, cfg.head_dim), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(4)[None, None], (3, 1, 4))
+    y = layers.apply_rope(x, pos, cfg.rope_theta, cfg.mrope_sections)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+
+
+# -------------------------------------------------------------------- MoE
+def test_moe_routing_conservation():
+    """With no-drop capacity, each token's output = gate-weighted sum of its
+    top-k experts; router mass conserved."""
+    cfg = reduced(registry.get("phi3.5-moe-42b-a6.6b"))
+    p = layers.init_moe(jax.random.key(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8, cfg.d_model)),
+                    jnp.float32)
+    y, aux = layers.moe(p, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) > 0.5  # load-balance loss ~1 for near-uniform router
+
+    # manual dense check: same result computed expert-by-expert
+    t = 2 * 8
+    xf = x.reshape(t, -1)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gv, idx = jax.lax.top_k(probs, cfg.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    want = np.zeros((t, cfg.d_model), np.float32)
+    for e in range(cfg.n_experts):
+        g = jax.nn.silu((xf @ p["we_gate"][e]).astype(jnp.float32))
+        u = xf @ p["we_up"][e]
+        ye = (g * u.astype(jnp.float32)).astype(x.dtype) @ p["we_down"][e]
+        for kk in range(cfg.top_k):
+            sel = np.asarray(idx[:, kk] == e)
+            want[sel] += np.asarray(gv[:, kk])[sel, None] * np.asarray(ye)[sel]
+    if "shared" in p:
+        want += np.asarray(layers.mlp(p["shared"], xf[None])[0])
+    np.testing.assert_allclose(np.asarray(y.reshape(t, -1)), want,
+                               rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------- ring buffer
+def test_ring_buffer_cache_eviction_semantics():
+    """Sliding-window decode: cache slot reuse keeps exactly the last
+    `window` positions visible."""
+    cfg = reduced(registry.get("glm4-9b")).with_(sliding_window=8)
+    from repro.models import transformer
+    params = transformer.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 21)))
+    # path A: prefill 12, decode 9
+    _, cache = transformer.prefill(params, toks[:, :12], cfg, {})
+    for i in range(12, 21):
+        la, cache = transformer.decode_step(params, cache, toks[:, i:i + 1],
+                                            jnp.int32(i), cfg)
+    # path B: prefill 20, decode last
+    _, cache_b = transformer.prefill(params, toks[:, :20], cfg, {})
+    lb, _ = transformer.decode_step(params, cache_b, toks[:, 20:21],
+                                    jnp.int32(20), cfg)
+    np.testing.assert_allclose(np.asarray(la, np.float32),
+                               np.asarray(lb, np.float32), rtol=2e-2, atol=2e-2)

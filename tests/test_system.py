@@ -1,0 +1,47 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full story in one test: two organizations align IDs, train a federated
+forest where no raw feature crosses the boundary, predict with one
+collective, and the result is bit-identical to centralized training —
+the paper's Given/Learn/Constraint statement (§3.2) executed end to end.
+"""
+import numpy as np
+
+from repro.core import (ForestParams, FederatedForest, crypto,
+                        fit_federated_forest, party)
+from repro.data import make_classification
+from repro.data.metrics import accuracy
+from repro.data.tabular import train_test_split
+
+
+def test_end_to_end_cross_silo_scenario():
+    # -- two data islands, shared sample space (paper §3.1) ---------------
+    x, y = make_classification(1200, 40, 2, n_informative=10, seed=42)
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.25, seed=0)
+
+    # -- private ID alignment (paper §4.3) ---------------------------------
+    ids = np.arange(len(xtr))
+    ia, ib = crypto.align_ids(crypto.hash_ids(ids), crypto.hash_ids(ids))
+    assert len(ia) == len(xtr)
+
+    # -- Learn: complete tree on master, partial trees on clients ----------
+    p = ForestParams(n_estimators=8, max_depth=6, n_bins=32, seed=1)
+    partition = party.make_vertical_partition(xtr, 2, p.n_bins)
+    ff = FederatedForest(p).fit(partition, ytr)
+
+    view = ff.master_tree_view()
+    assert (view["owner"] >= 0).any()            # master knows owners
+    trees = ff.trees_
+    import jax
+    t = jax.tree.map(np.asarray, trees)
+    for i in range(2):                           # clients store only their own
+        assert (t.split_floc[i][~t.has_split[i]] == -1).all()
+
+    # -- Predict: one collective; useful model ------------------------------
+    pred = ff.predict(xte)
+    acc = accuracy(yte, pred)
+    assert acc > 0.8, acc
+
+    # -- Constraint (§3.2): performance == non-federated --------------------
+    central = fit_federated_forest(xtr, ytr, 1, p)
+    np.testing.assert_array_equal(central.predict(xte), pred)
