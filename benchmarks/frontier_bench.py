@@ -1,0 +1,96 @@
+"""Dense vs frontier-compacted split search on deep sparse levels.
+
+The paper's hot loop (split-statistics accumulation, §4) runs once per tree
+level.  The dense builder histograms all ``2^d`` heap slots; on a deep level
+only ``n_live`` nodes still carry samples, so the frontier path remaps them
+into ``cap`` compact slots and pays O(n_live) instead of O(2^d) in the
+histogram -> gains -> argbest stage.  Rows report per-level stage times at
+realistic sparsity (n_live ~ N/64 nodes alive) plus an end-to-end deep-tree
+build, with the dense/frontier speedup in the derived column.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import ForestParams, protocol, tree
+from repro.data import make_classification
+
+N, F, BINS, C = 4096, 16, 16, 2
+
+
+def _level_inputs(depth: int, rng: np.random.Generator):
+    """A sparse level-``depth`` routing state: n_live occupied heap slots."""
+    width = 2 ** depth
+    n_live = max(2, N // 64)
+    live = np.sort(rng.choice(width, size=min(n_live, width), replace=False))
+    seg = jnp.asarray(rng.choice(live, size=N), jnp.int32)
+    xb = jnp.asarray(rng.integers(0, BINS, (N, F)), jnp.int32)
+    wstats = jnp.asarray(rng.normal(size=(N, C)), jnp.float32)
+    return xb, seg, wstats, width, len(live)
+
+
+def _bench_level(depth: int, cap: int) -> dict:
+    rng = np.random.default_rng(depth)
+    xb, seg, wstats, width, n_live = _level_inputs(depth, rng)
+    fmask = jnp.ones((F,), bool)
+    feat_gid = jnp.arange(F, dtype=jnp.int32)
+    p = ForestParams(max_depth=max(depth, 1), n_bins=BINS,
+                     frontier_cap=cap)
+
+    dense = jax.jit(lambda a, s, w: tree._split_search_dense(
+        a, s, w, fmask, feat_gid, width, p, "scatter", None)[0])
+    frontier = jax.jit(lambda a, s, w: tree._split_search_frontier(
+        a, s, w, fmask, feat_gid, width, cap, p, "scatter"))
+
+    t_dense = timeit(lambda: jax.block_until_ready(dense(xb, seg, wstats)))
+    t_front = timeit(lambda: jax.block_until_ready(frontier(xb, seg, wstats)))
+    speedup = t_dense / max(t_front, 1e-12)
+    emit(f"frontier/level_d{depth}_dense", t_dense,
+         f"width={width} live={n_live}")
+    emit(f"frontier/level_d{depth}_frontier", t_front,
+         f"cap={cap} speedup={speedup:.2f}x")
+    return {"depth": depth, "dense_s": t_dense, "frontier_s": t_front,
+            "speedup": speedup}
+
+
+def _bench_build(depth: int, cap: int) -> dict:
+    """End-to-end deep-tree build, dense vs compacted (same forest out)."""
+    x, y = make_classification(1024, F, 2, seed=0)
+    from repro.core import crypto, impurity
+    from repro.core.party import make_vertical_partition
+    part = make_vertical_partition(x, 2, BINS)
+    y_stats = impurity.stat_channels(jnp.asarray(y), "classification", 2)
+    sel = jnp.ones((1, part.n_features), bool)
+    w = jnp.ones((1, part.n_samples), jnp.float32)
+    xb, gid = jnp.asarray(part.xb), jnp.asarray(part.feat_gid)
+
+    out = {}
+    for name, fcap in (("dense", 0), ("frontier", cap)):
+        p = ForestParams(n_estimators=1, max_depth=depth, n_bins=BINS,
+                         bootstrap=False, frontier_cap=fcap)
+        run = protocol.jit_simulated(tree.fit_spmd(p), n_party=2, n_shared=3)
+        out[name] = timeit(
+            lambda: jax.block_until_ready(run(xb, gid, sel, w, y_stats)),
+            repeat=2)
+    speedup = out["dense"] / max(out["frontier"], 1e-12)
+    emit(f"frontier/build_d{depth}_dense", out["dense"], "")
+    emit(f"frontier/build_d{depth}_frontier", out["frontier"],
+         f"cap={cap} speedup={speedup:.2f}x")
+    return {"depth": depth, **out, "speedup": speedup}
+
+
+def run() -> list[dict]:
+    fast = bool(os.environ.get("REPRO_BENCH_FAST"))
+    depths = (8, 10) if fast else (8, 10, 12)
+    rows = [_bench_level(d, cap=128) for d in depths]
+    rows.append(_bench_build(8 if fast else 12, cap=128))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

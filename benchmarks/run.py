@@ -15,7 +15,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     from benchmarks import (binning_ablation, comm_complexity, fig3_domains,
-                            fig456_prediction, kernel_bench, table1_parity)
+                            fig456_prediction, frontier_bench, kernel_bench,
+                            table1_parity)
 
     if os.environ.get("REPRO_BENCH_FAST"):
         table1_parity.BENCH_SETS = ["ionosphere", "spambase", "waveform",
@@ -26,6 +27,7 @@ def main() -> None:
     comm_complexity.run()
     binning_ablation.run()
     kernel_bench.run()
+    frontier_bench.run()
     print(f"# total_bench_wall_s={time.time() - t0:.1f}", file=sys.stderr)
 
 

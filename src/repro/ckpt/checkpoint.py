@@ -6,17 +6,29 @@ No orbax on the box; this covers the same contract at the scale we run:
     "modeling can be easily recovered from the break point" requirement, §4.1
     — tree-build state is a pytree like any other here);
   * works for model params, optimizer state, and fitted PartyTree forests.
+
+``zstandard`` is optional: hosts without it fall back to stdlib ``zlib``
+(the codec is recorded in the file extension, so either build restores the
+other's zlib checkpoints; a .zst checkpoint does require zstandard).
 """
 from __future__ import annotations
 
 import os
 import pathlib
+import zlib
 from typing import Any
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:                       # pragma: no cover - env dependent
+    zstandard = None
+
+_ZSTD_NAME = "arrays.msgpack.zst"
+_ZLIB_NAME = "arrays.msgpack.zlib"
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -37,9 +49,17 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any) -> str:
     payload = {k: {"dtype": str(v.dtype), "shape": list(v.shape),
                    "data": v.tobytes()} for k, v in flat.items()}
     raw = msgpack.packb(payload, use_bin_type=True)
-    tmp.mkdir(exist_ok=True)
-    (tmp / "arrays.msgpack.zst").write_bytes(
-        zstandard.ZstdCompressor(level=3).compress(raw))
+    if tmp.exists():
+        # a crashed save may have left a payload in the other codec; a stale
+        # file surviving the rename would shadow the fresh one on restore
+        import shutil
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    if zstandard is not None:
+        (tmp / _ZSTD_NAME).write_bytes(
+            zstandard.ZstdCompressor(level=3).compress(raw))
+    else:
+        (tmp / _ZLIB_NAME).write_bytes(zlib.compress(raw, 3))
     if final.exists():
         import shutil
         shutil.rmtree(final)
@@ -50,8 +70,15 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any) -> str:
 def restore_checkpoint(directory: str | os.PathLike, step: int,
                        like: Any) -> Any:
     d = pathlib.Path(directory) / f"step_{step:08d}"
-    raw = zstandard.ZstdDecompressor().decompress(
-        (d / "arrays.msgpack.zst").read_bytes())
+    if (d / _ZLIB_NAME).exists():
+        raw = zlib.decompress((d / _ZLIB_NAME).read_bytes())
+    else:
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                f"{d / _ZSTD_NAME} is zstd-compressed but 'zstandard' is "
+                "not installed; pip install zstandard to restore it")
+        raw = zstandard.ZstdDecompressor().decompress(
+            (d / _ZSTD_NAME).read_bytes())
     payload = msgpack.unpackb(raw, raw=False)
     flat = {k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(v["shape"])
             for k, v in payload.items()}

@@ -33,6 +33,9 @@ class BoostParams:
     n_bins: int = 32
     reg_lambda: float = 1.0
     seed: int = 0
+    # plumbed into the per-round tree build (see ForestParams)
+    hist_impl: str = "auto"
+    frontier_cap: int = 256
 
     def tree_params(self) -> ForestParams:
         # gradient trees: stats channels are (h, g, g²-ish) via the
@@ -42,7 +45,8 @@ class BoostParams:
                             max_depth=self.max_depth,
                             min_samples_leaf=self.min_samples_leaf,
                             n_bins=self.n_bins, bootstrap=False,
-                            seed=self.seed)
+                            seed=self.seed, hist_impl=self.hist_impl,
+                            frontier_cap=self.frontier_cap)
 
 
 @dataclasses.dataclass

@@ -34,7 +34,9 @@ class FederatedForest:
     # ("there will be a trade-off between the security protection and the
     # computational efficiency").
     mask_regression: bool = False
-    hist_impl: str = "scatter"
+    # histogram backend override; None defers to params.hist_impl ("auto"
+    # resolves per host in kernels.ops — scatter on CPU/GPU, Pallas on TPU)
+    hist_impl: str | None = None
 
     # fitted state
     trees_: tree.PartyTree | None = None      # leading axes (M, T, ...)

@@ -23,6 +23,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.core import impurity
 from repro.core.tree import PartyTree
 from repro.core.types import PARTY_AXIS, ForestParams
@@ -106,7 +107,7 @@ def forest_predict_oneround(trees: PartyTree, xb_test: jnp.ndarray,
     mem = lax.map(one, trees)                                # (T, N, nn) bool
     # === Proposition 1: ONE collective for the whole forest ===
     m = lax.psum(mem.astype(mask_dtype), PARTY_AXIS)
-    n_parties = lax.axis_size(PARTY_AXIS)                    # static, no comm
+    n_parties = compat.axis_size(PARTY_AXIS)                 # static, no comm
     inter = m == jnp.asarray(n_parties, mask_dtype)          # S^l = ∩ S_i^l
     return _combine_votes(inter, trees, params, aggregate, vote_impl)
 

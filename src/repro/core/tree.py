@@ -17,6 +17,21 @@ TPU adaptation of the paper's recursive MPI algorithm (see DESIGN.md §2):
     same function the trusted server computes in the paper;
   * trees live in fixed-shape heap arrays (node i -> children 2i+1, 2i+2).
 
+Frontier compaction (the §Perf tentpole): deep levels are mostly dead — a
+node stays "live" only while samples are still routed to it, so the live
+count is bounded by the sample count and, in practice, shrinks further as
+branches bottom out into leaves.  At depths where the heap level is wider
+than ``params.frontier_cap``, live nodes are remapped (in heap order) into a
+dense segment index of static capacity ``min(2^d, N, frontier_cap)`` and the
+histogram -> gains -> per-node argbest stage runs over compact slots, one
+while_loop pass per ``cap`` live nodes — so histogram/gain compute scales
+with the ACTUAL live-node count, not the worst-case ``2^d`` width.  The
+per-node best-split results are scattered back to heap order before the
+collectives, which keeps the cross-party protocol (and therefore the built
+``PartyTree``) bit-identical to the dense build: compaction only re-indexes
+which histogram row a live node's samples accumulate into, never which
+samples they are.
+
 Distributed model storage is preserved exactly: a party records (feature,
 threshold) only for nodes it owns (``has_split``); the shared structure
 (``is_leaf`` + heap layout) is what the paper calls "keeping the node
@@ -72,9 +87,95 @@ def _local_argbest(gains: jnp.ndarray, feat_gid: jnp.ndarray):
     return g, gid, bin_, floc
 
 
+def _split_search_dense(xb, seg, wstats, fmask, feat_gid, width, params,
+                        hist_impl, prev_hist):
+    """Seed path: histogram every heap slot of the level at once."""
+    fp_dim = xb.shape[1]
+    if params.hist_subtraction and prev_hist is not None:
+        # Beyond-paper: histogram only the LEFT children (half the node
+        # one-hot width), derive the right siblings by subtraction from
+        # the retained parent histograms. Children of leaf parents get
+        # garbage rows, but do_split is gated on cnt (true sample
+        # counts), so they can never be selected.
+        left_seg = jnp.where((seg >= 0) & (seg % 2 == 0), seg // 2, -1)
+        hist_left = ops.histogram(xb, left_seg, wstats, width // 2,
+                                  params.n_bins, impl=hist_impl)
+        hist = jnp.stack([hist_left, prev_hist - hist_left],
+                         axis=1).reshape(width, fp_dim, params.n_bins,
+                                         wstats.shape[-1])
+    else:
+        hist = ops.histogram(xb, seg, wstats, width, params.n_bins,
+                             impl=hist_impl)
+    gains = impurity.split_gains(hist, params.task, params.min_samples_leaf)
+    gains = jnp.where(fmask[None, :, None], gains, -jnp.inf)
+    return _local_argbest(gains, feat_gid), hist
+
+
+def _split_search_frontier(xb, seg, wstats, fmask, feat_gid, width, cap,
+                           params, hist_impl):
+    """Compacted path: histogram ``cap`` live slots per pass, scatter back.
+
+    Live node j (heap-level index, any routed sample) gets compact slot
+    ``rank(j among live)``; pass k handles slots [k*cap, (k+1)*cap) and a
+    while_loop stops as soon as every live node has been processed — dead
+    width costs nothing.  Scatter targets are disjoint across passes, and
+    each live node's histogram row accumulates exactly the samples the dense
+    row would (in the same sample order), so the per-node (gain, gid, bin,
+    floc) results written back to heap order are bit-identical to the dense
+    search on every live node.  Dead nodes keep the -inf/_BIG defaults;
+    ``do_split`` can never select them on either path (cnt gate + positive
+    gain threshold), so the protocol downstream sees no difference.
+    """
+    n = xb.shape[0]
+    # live-node ranking, shared by construction: `seg` is derived from the
+    # shared routing state, so every party compacts identically.
+    dump = jnp.where(seg >= 0, seg, width)
+    occ = jnp.zeros((width + 1,), bool).at[dump].set(True)[:width]
+    slot_of_node = jnp.cumsum(occ.astype(jnp.int32)) - 1       # (width,)
+    n_live = occ.sum().astype(jnp.int32)
+    sslot = jnp.where(seg >= 0, slot_of_node[jnp.clip(seg, 0)], -1)  # (n,)
+    nil_idx = jnp.arange(width, dtype=jnp.int32)
+
+    def cond(state):
+        k = state[0]
+        return k * cap < n_live
+
+    def body(state):
+        k, g_lv, gid_lv, bin_lv, floc_lv = state
+        lo = k * cap
+        in_pass = (sslot >= lo) & (sslot < lo + cap)
+        seg_k = jnp.where(in_pass, sslot - lo, -1)
+        hist = ops.histogram(xb, seg_k, wstats, cap, params.n_bins,
+                             impl=hist_impl)
+        gains = impurity.split_gains(hist, params.task,
+                                     params.min_samples_leaf)
+        gains = jnp.where(fmask[None, :, None], gains, -jnp.inf)
+        g_c, gid_c, bin_c, floc_c = _local_argbest(gains, feat_gid)
+        # slot -> heap-level node of THIS pass (cap is the dump row)
+        node_in_pass = occ & (slot_of_node >= lo) & (slot_of_node < lo + cap)
+        tgt = jnp.where(node_in_pass, slot_of_node - lo, cap)
+        inv = jnp.full((cap + 1,), width, jnp.int32).at[tgt].set(
+            jnp.where(node_in_pass, nil_idx, width))[:cap]
+        # scatter results back to heap order (width is the dump row)
+        g_lv = g_lv.at[inv].set(g_c)
+        gid_lv = gid_lv.at[inv].set(gid_c)
+        bin_lv = bin_lv.at[inv].set(bin_c)
+        floc_lv = floc_lv.at[inv].set(floc_c)
+        return k + 1, g_lv, gid_lv, bin_lv, floc_lv
+
+    init = (jnp.int32(0),
+            jnp.full((width + 1,), -jnp.inf, jnp.float32),
+            jnp.full((width + 1,), _BIG, jnp.int32),
+            jnp.full((width + 1,), _BIG, jnp.int32),
+            jnp.full((width + 1,), _BIG, jnp.int32))
+    _, g_lv, gid_lv, bin_lv, floc_lv = lax.while_loop(cond, body, init)
+    return g_lv[:width], gid_lv[:width], bin_lv[:width], floc_lv[:width]
+
+
 def build_tree(xb: jnp.ndarray, feat_gid: jnp.ndarray, feat_sel: jnp.ndarray,
                weight: jnp.ndarray, y_stats: jnp.ndarray,
-               params: ForestParams, *, hist_impl: str = "scatter") -> PartyTree:
+               params: ForestParams, *,
+               hist_impl: str | None = None) -> PartyTree:
     """Build one tree, SPMD over PARTY_AXIS.
 
     Args:
@@ -84,15 +185,18 @@ def build_tree(xb: jnp.ndarray, feat_gid: jnp.ndarray, feat_sel: jnp.ndarray,
       weight:   (N,) float32 bootstrap weights (0 excludes a sample).
       y_stats:  (N, C) label stat channels — shared across parties (the paper
                 copies encrypted labels to every client, §3.1).
+      hist_impl: histogram backend override; None uses ``params.hist_impl``.
     """
-    n, fp_dim = xb.shape
+    n, _ = xb.shape
     c = y_stats.shape[-1]
     nn = params.n_nodes
     me = lax.axis_index(PARTY_AXIS)
     task = params.task
+    hist_impl = params.hist_impl if hist_impl is None else hist_impl
 
     fmask = (feat_gid >= 0) & feat_sel[jnp.clip(feat_gid, 0)]
     wstats = y_stats.astype(jnp.float32) * weight[:, None]
+    xb_i32 = xb.astype(jnp.int32)
 
     node = jnp.zeros((n,), jnp.int32)
     is_leaf = jnp.zeros((nn,), bool)
@@ -121,25 +225,19 @@ def build_tree(xb: jnp.ndarray, feat_gid: jnp.ndarray, feat_sel: jnp.ndarray,
             break
 
         # ---- local split search (the Pallas histogram hot spot) ------------
-        if params.hist_subtraction and prev_hist is not None:
-            # Beyond-paper: histogram only the LEFT children (half the node
-            # one-hot width), derive the right siblings by subtraction from
-            # the retained parent histograms. Children of leaf parents get
-            # garbage rows, but do_split is gated on cnt (true sample
-            # counts), so they can never be selected.
-            left_seg = jnp.where((seg >= 0) & (seg % 2 == 0), seg // 2, -1)
-            hist_left = ops.histogram(xb.astype(jnp.int32), left_seg, wstats,
-                                      width // 2, params.n_bins,
-                                      impl=hist_impl)
-            hist = jnp.stack([hist_left, prev_hist - hist_left],
-                             axis=1).reshape(width, fp_dim, params.n_bins, c)
+        # static per level: live nodes <= min(width, N) always, so the
+        # compacted path only engages where it can actually shrink the
+        # histogram (cap < width); shallow levels keep the seed's dense path.
+        cap = min(width, n, params.frontier_cap or width)
+        if params.frontier_cap and cap < width:
+            g_loc, gid_loc, bin_loc, floc_loc = _split_search_frontier(
+                xb_i32, seg, wstats, fmask, feat_gid, width, cap, params,
+                hist_impl)
+            prev_hist = None  # compacted levels retain no dense parent hist
         else:
-            hist = ops.histogram(xb.astype(jnp.int32), seg, wstats, width,
-                                 params.n_bins, impl=hist_impl)
-        prev_hist = hist
-        gains = impurity.split_gains(hist, task, params.min_samples_leaf)
-        gains = jnp.where(fmask[None, :, None], gains, -jnp.inf)
-        g_loc, gid_loc, bin_loc, floc_loc = _local_argbest(gains, feat_gid)
+            (g_loc, gid_loc, bin_loc, floc_loc), prev_hist = \
+                _split_search_dense(xb_i32, seg, wstats, fmask, feat_gid,
+                                    width, params, hist_impl, prev_hist)
 
         # ---- the paper's master: gather -> argmax -> notify, as collectives
         g_all = lax.all_gather(g_loc, PARTY_AXIS)          # (M, width)
@@ -176,7 +274,7 @@ def build_tree(xb: jnp.ndarray, feat_gid: jnp.ndarray, feat_sel: jnp.ndarray,
         bin_lv = jnp.where(mine, bin_loc, 0)
         mine_s = in_lvl & mine[nil_c]
         vals = jnp.take_along_axis(
-            xb.astype(jnp.int32), floc_lv[nil_c][:, None], axis=1)[:, 0]
+            xb_i32, floc_lv[nil_c][:, None], axis=1)[:, 0]
         go_r_loc = jnp.where(mine_s, (vals > bin_lv[nil_c]).astype(jnp.int32), 0)
         go_r = lax.psum(go_r_loc, PARTY_AXIS)  # exactly one party contributes
         advance = in_lvl & do_split[nil_c]
@@ -187,19 +285,41 @@ def build_tree(xb: jnp.ndarray, feat_gid: jnp.ndarray, feat_sel: jnp.ndarray,
 
 
 def build_forest(xb, feat_gid, feat_sels, weights, y_stats,
-                 params: ForestParams, *, hist_impl: str = "scatter") -> PartyTree:
+                 params: ForestParams, *,
+                 hist_impl: str | None = None) -> PartyTree:
     """SPMD bagging loop: stack T trees (leading axis T on every leaf).
 
     ``lax.map`` keeps HLO size O(1) in the number of trees and bounds peak
-    histogram memory to one tree's level at a time.
+    histogram memory to one tree's level at a time.  With
+    ``params.trees_per_batch > 1`` the map runs over tree CHUNKS and a vmap
+    builds each chunk's trees together — per-tree results are unchanged
+    (the batch dimension is independent), the chunk just shares one traversal
+    of the data.
     """
     def one(args):
         sel, w = args
         return build_tree(xb, feat_gid, sel, w, y_stats, params,
                           hist_impl=hist_impl)
-    return lax.map(one, (feat_sels, weights))
+
+    tpb = params.trees_per_batch
+    t = feat_sels.shape[0]
+    if tpb <= 1 or t <= 1:
+        return lax.map(one, (feat_sels, weights))
+
+    # pad T up to a multiple of the batch; padded trees carry zero weights
+    # and an empty feature subsample, build to all-dead stubs, and are
+    # sliced off below.
+    pad = -t % tpb
+    sels_p = jnp.pad(feat_sels, ((0, pad), (0, 0)))
+    w_p = jnp.pad(weights, ((0, pad), (0, 0)))
+    n_chunks = (t + pad) // tpb
+    chunked = (sels_p.reshape(n_chunks, tpb, -1),
+               w_p.reshape(n_chunks, tpb, -1))
+    out = lax.map(jax.vmap(one), chunked)        # leaves (n_chunks, tpb, ...)
+    return jax.tree.map(
+        lambda a: a.reshape((n_chunks * tpb,) + a.shape[2:])[:t], out)
 
 
-def fit_spmd(params: ForestParams, hist_impl: str = "scatter"):
+def fit_spmd(params: ForestParams, hist_impl: str | None = None):
     """Returns the party-local SPMD fit function (for vmap or shard_map)."""
     return functools.partial(build_forest, params=params, hist_impl=hist_impl)

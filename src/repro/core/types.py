@@ -36,6 +36,23 @@ class ForestParams:
     # root. Exact for classification (integer counts in f32); for regression
     # it reorders float sums, so it is a statistically-equivalent variant.
     hist_subtraction: bool = False
+    # Frontier compaction (§Perf, tentpole): at depths where the heap level
+    # is wider than ``frontier_cap``, live nodes are remapped into a dense
+    # segment index of capacity min(2^d, n_samples, frontier_cap) and the
+    # histogram/gain stage runs over compact slots, in as many passes as the
+    # LIVE node count requires (a while_loop — compute scales with actual
+    # sparsity, not worst-case width).  Results are scattered back to heap
+    # order, so the built PartyTree is bit-identical to the dense build.
+    # 0 disables compaction (the dense seed behavior).
+    frontier_cap: int = 256
+    # Histogram backend: a key of kernels.ops.BACKENDS, or "auto" (scatter on
+    # CPU/GPU hosts, the compiled Pallas kernel on TPU).
+    hist_impl: str = "auto"
+    # Bagging batching: how many trees build together under one vmap (the
+    # outer lax.map then runs over tree *chunks*).  1 reproduces the seed's
+    # pure lax.map; larger values trade HLO size/peak memory for better
+    # hardware utilization on wide hosts.
+    trees_per_batch: int = 1
 
     def __post_init__(self) -> None:
         if not (1 <= self.n_bins <= 256):
@@ -46,6 +63,10 @@ class ForestParams:
             raise ValueError(f"unknown task {self.task!r}")
         if not (0.0 < self.max_features <= 1.0):
             raise ValueError("max_features must be in (0, 1]")
+        if self.frontier_cap < 0:
+            raise ValueError("frontier_cap must be >= 0 (0 = dense build)")
+        if self.trees_per_batch < 1:
+            raise ValueError("trees_per_batch must be >= 1")
 
     # ---- derived static sizes -------------------------------------------------
     @property

@@ -68,13 +68,18 @@ def _hist_kernel(xb_ref, seg_ref, stats_ref, out_ref, *, n_level: int,
 
 @functools.partial(jax.jit, static_argnames=("n_level", "n_bins", "interpret"))
 def histogram_pallas(xb: jnp.ndarray, seg: jnp.ndarray, stats: jnp.ndarray,
-                     n_level: int, n_bins: int, *, interpret: bool = True
-                     ) -> jnp.ndarray:
+                     n_level: int, n_bins: int, *,
+                     interpret: bool | None = None) -> jnp.ndarray:
     """Pallas histogram. Returns (n_level, F, n_bins, C) float32.
 
     Sample count is padded to CHUNK and features to F_TILE; padded samples get
     seg = -1 (dropped by the node one-hot), padded features are sliced off.
+
+    ``interpret=None`` resolves per host: compiled on a real TPU, the Pallas
+    interpreter (a correctness path, not a perf path) everywhere else.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n, f = xb.shape
     c = stats.shape[-1]
     n_pad = -n % CHUNK

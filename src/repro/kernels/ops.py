@@ -1,15 +1,24 @@
-"""Jit'd public wrappers for the kernels, with backend dispatch.
+"""Jit'd public wrappers for the kernels, with a histogram backend registry.
 
-``histogram`` has three interchangeable implementations:
-  * ``pallas``  — the TPU kernel (interpret=True executes it on CPU);
-  * ``scatter`` — index-add formulation, fastest on CPU hosts (used by the
-                  single-host simulation path of the federated protocol);
-  * ``ref``     — the einsum oracle.
-All agree to float32 tolerance (tests/test_kernels.py sweeps them).
+``histogram`` dispatches through ``BACKENDS``, a name -> callable registry:
+  * ``pallas``            — the TPU kernel, compiled when the host really is
+                            a TPU and interpret-mode elsewhere;
+  * ``pallas_interpret``  — the TPU kernel forced through the interpreter
+                            (correctness path on any host);
+  * ``scatter``           — index-add formulation, fastest on CPU/GPU hosts
+                            (used by the single-host simulation path of the
+                            federated protocol);
+  * ``ref``               — the einsum oracle.
+  * ``auto``              — resolves per host: compiled Pallas on TPU,
+                            scatter everywhere else.
+All agree to float32 tolerance (tests/test_kernels.py sweeps them).  New
+backends register with :func:`register_backend` and become selectable through
+``ForestParams.hist_impl`` without touching the builder.
 """
 from __future__ import annotations
 
 import functools
+from typing import Callable, Protocol
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +27,42 @@ from repro.kernels import histogram as _hist_kernel
 from repro.kernels import ref as _ref
 
 
+class HistogramFn(Protocol):
+    def __call__(self, xb: jnp.ndarray, seg: jnp.ndarray, stats: jnp.ndarray,
+                 n_level: int, n_bins: int) -> jnp.ndarray: ...
+
+
+BACKENDS: dict[str, HistogramFn] = {}
+
+
+def register_backend(name: str) -> Callable[[HistogramFn], HistogramFn]:
+    """Register a histogram implementation under ``name``.
+
+    Implementations take ``(xb, seg, stats, n_level, n_bins)`` and return the
+    ``(n_level, F, n_bins, C)`` float32 split-statistics tensor; samples with
+    ``seg < 0`` must contribute nothing.
+    """
+    def deco(fn: HistogramFn) -> HistogramFn:
+        BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def resolve_backend(impl: str) -> str:
+    """Map ``"auto"`` onto a concrete registry key for this host."""
+    if impl != "auto":
+        if impl not in BACKENDS:
+            raise ValueError(
+                f"unknown impl {impl!r} (have {sorted(BACKENDS)})")
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "scatter"
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(BACKENDS))
+
+
+@register_backend("scatter")
 def _histogram_scatter(xb, seg, stats, n_level: int, n_bins: int):
     n, f = xb.shape
     c = stats.shape[-1]
@@ -31,15 +76,39 @@ def _histogram_scatter(xb, seg, stats, n_level: int, n_bins: int):
     return out[:-1].reshape(n_level, f, n_bins, c)
 
 
-@functools.partial(jax.jit, static_argnames=("n_level", "n_bins", "impl"))
+@register_backend("pallas")
+def _histogram_pallas(xb, seg, stats, n_level: int, n_bins: int):
+    # interpret=None: compiled on a real TPU, interpreter elsewhere (CPU
+    # "pallas" runs have always meant interpret=True here — correctness path)
+    return _hist_kernel.histogram_pallas(xb, seg, stats, n_level, n_bins,
+                                         interpret=None)
+
+
+@register_backend("pallas_interpret")
+def _histogram_pallas_interpret(xb, seg, stats, n_level: int, n_bins: int):
+    return _hist_kernel.histogram_pallas(xb, seg, stats, n_level, n_bins,
+                                         interpret=True)
+
+
+@register_backend("ref")
+def _histogram_ref(xb, seg, stats, n_level: int, n_bins: int):
+    return _ref.histogram_ref(xb, seg, stats, n_level, n_bins)
+
+
+@functools.partial(jax.jit, static_argnames=("n_level", "n_bins", "fn"))
+def _histogram_call(xb, seg, stats, n_level: int, n_bins: int, fn: HistogramFn):
+    return fn(xb, seg, stats, n_level, n_bins)
+
+
 def histogram(xb: jnp.ndarray, seg: jnp.ndarray, stats: jnp.ndarray,
-              n_level: int, n_bins: int, impl: str = "scatter") -> jnp.ndarray:
-    """Split-statistics histogram: (n_level, F, n_bins, C) float32."""
-    if impl == "scatter":
-        return _histogram_scatter(xb, seg, stats, n_level, n_bins)
-    if impl == "pallas":
-        return _hist_kernel.histogram_pallas(xb, seg, stats, n_level, n_bins,
-                                             interpret=True)
-    if impl == "ref":
-        return _ref.histogram_ref(xb, seg, stats, n_level, n_bins)
-    raise ValueError(f"unknown impl {impl!r}")
+              n_level: int, n_bins: int, impl: str = "auto") -> jnp.ndarray:
+    """Split-statistics histogram: (n_level, F, n_bins, C) float32.
+
+    The registry lookup happens OUTSIDE the jit boundary (the resolved
+    callable is the static cache key), so re-registering a backend under an
+    existing name takes effect immediately instead of being shadowed by
+    cached traces of the old callable.
+    """
+    fn = BACKENDS[resolve_backend(impl)]
+    return _histogram_call(xb, seg, stats, n_level=n_level, n_bins=n_bins,
+                           fn=fn)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.configs import registry
 from repro.configs.base import ArchConfig
 from repro.models import sharding, transformer
@@ -80,7 +81,7 @@ class Case:
         outs = sharding.named(mesh, self.out_shardings)
         jitted = jax.jit(self.fn, in_shardings=ins, out_shardings=outs,
                          donate_argnums=self.donate)
-        with jax.set_mesh(mesh):  # resolves in-model sharding constraints
+        with compat.set_mesh(mesh):  # resolves in-model sharding constraints
             return jitted.lower(*self.args)
 
 
@@ -222,8 +223,9 @@ def forest_case(shape_name: str, mesh: Mesh, params=None, *,
         out = base_fit(xb[0], gid[0], sel, w, ys)
         return jax.tree.map(lambda a: a[None], out)
 
-    fit_sharded = jax.shard_map(fit_local, mesh=mesh, in_specs=fit_in_specs,
-                                out_specs=fit_out_specs, check_vma=False)
+    fit_sharded = compat.shard_map(fit_local, mesh=mesh,
+                                   in_specs=fit_in_specs,
+                                   out_specs=fit_out_specs, check_vma=False)
 
     if shape_name == "ff_train":
         return fit_sharded, fit_args, p
@@ -238,7 +240,7 @@ def forest_case(shape_name: str, mesh: Mesh, params=None, *,
                                                       aggregate=False)
         return per_tree[None]                                 # (1, T, N_t)
 
-    predict_sharded = jax.shard_map(
+    predict_sharded = compat.shard_map(
         predict_local, mesh=mesh,
         in_specs=(tree_specs, P("parties")),
         out_specs=P("parties", "trees"), check_vma=False)

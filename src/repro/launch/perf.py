@@ -11,6 +11,7 @@ import time          # noqa: E402
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro import compat                          # noqa: E402
 from repro import roofline as rl                  # noqa: E402
 from repro.launch import cases, mesh as mesh_mod  # noqa: E402
 
@@ -136,9 +137,10 @@ def run_ff_variant(variant: str, force=False) -> dict:
 
         tree_specs = jax.tree.map(lambda _: P("parties", "trees"), trees_shape,
                                   is_leaf=lambda x: hasattr(x, "shape"))
-        inner = jax.shard_map(predict_local, mesh=mesh,
-                              in_specs=(tree_specs, P("parties")),
-                              out_specs=P("parties", "trees"), check_vma=False)
+        inner = compat.shard_map(predict_local, mesh=mesh,
+                                 in_specs=(tree_specs, P("parties")),
+                                 out_specs=P("parties", "trees"),
+                                 check_vma=False)
 
         def fn(trees, xbt):  # noqa: F811 — same vote wrapper as forest_case
             per_tree = inner(trees, xbt)

@@ -1,0 +1,139 @@
+"""Frontier-compacted builder invariants (the tentpole's losslessness claim)
+and the histogram backend registry.
+
+The compacted build must be BIT-IDENTICAL to the dense build — same
+``PartyTree`` arrays, same predictions — on both tasks, with single-pass and
+multi-pass (tiny cap) compaction, and under tree batching.  Compaction is a
+pure re-indexing of histogram rows; any deviation means it changed which
+samples a node accumulates, which would break the paper's FF(M) == FF(1)
+guarantee downstream.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ForestParams, fit_federated_forest
+from repro.data import make_classification, make_regression
+from repro.kernels import ops
+
+
+def _assert_same_forest(a, b):
+    ta = jax.tree.map(np.asarray, a.trees_)
+    tb = jax.tree.map(np.asarray, b.trees_)
+    for field in ta._fields:
+        np.testing.assert_array_equal(
+            getattr(ta, field), getattr(tb, field), err_msg=field)
+
+
+# deep + small-N: levels beyond depth log2(cap) engage the compacted path
+_DEEP = dict(n_estimators=3, max_depth=9, n_bins=8, seed=3)
+
+
+def test_frontier_bit_identical_classification():
+    x, y = make_classification(300, 12, 2, seed=0)
+    dense = fit_federated_forest(
+        x, y, 3, ForestParams(frontier_cap=0, **_DEEP))
+    frontier = fit_federated_forest(
+        x, y, 3, ForestParams(frontier_cap=64, **_DEEP))
+    _assert_same_forest(dense, frontier)
+    np.testing.assert_array_equal(dense.predict(x), frontier.predict(x))
+
+
+def test_frontier_bit_identical_regression():
+    x, y = make_regression(250, 8, seed=2)
+    deep = dict(task="regression", n_estimators=2, max_depth=8, n_bins=8,
+                seed=1)
+    dense = fit_federated_forest(
+        x, y, 2, ForestParams(frontier_cap=0, **deep))
+    frontier = fit_federated_forest(
+        x, y, 2, ForestParams(frontier_cap=32, **deep))
+    _assert_same_forest(dense, frontier)
+    np.testing.assert_allclose(dense.predict(x), frontier.predict(x),
+                               rtol=0, atol=0)
+
+
+def test_frontier_multipass_tiny_cap():
+    """cap=4 forces the while_loop through many passes per level — the
+    scatter-back must still reassemble the exact dense level results."""
+    x, y = make_classification(200, 10, 3, seed=1)
+    deep = dict(n_classes=3, n_estimators=2, max_depth=8, n_bins=8, seed=5)
+    dense = fit_federated_forest(
+        x, y, 2, ForestParams(frontier_cap=0, **deep))
+    frontier = fit_federated_forest(
+        x, y, 2, ForestParams(frontier_cap=4, **deep))
+    _assert_same_forest(dense, frontier)
+    np.testing.assert_array_equal(dense.predict(x), frontier.predict(x))
+
+
+def test_frontier_composes_with_hist_subtraction():
+    """Dense shallow levels may use the subtraction trick while deep levels
+    compact; classification subtraction is exact, so the forest still
+    matches the plain dense build bit-for-bit."""
+    x, y = make_classification(200, 10, 3, seed=1)
+    deep = dict(n_classes=3, n_estimators=2, max_depth=8, n_bins=8, seed=5)
+    dense = fit_federated_forest(
+        x, y, 2, ForestParams(frontier_cap=0, **deep))
+    both = fit_federated_forest(
+        x, y, 2, ForestParams(frontier_cap=16, hist_subtraction=True, **deep))
+    _assert_same_forest(dense, both)
+
+
+def test_trees_per_batch_identical():
+    """vmap-batched bagging (incl. the T % batch != 0 padding path) builds
+    the same trees as the seed's pure lax.map — with deep levels and a tiny
+    frontier_cap so the batched build also exercises the compacted
+    while_loop (the tentpole's two mechanisms composed, not in isolation).
+    """
+    x, y = make_classification(200, 10, 3, seed=1)
+    base = dict(n_classes=3, n_estimators=5, max_depth=8, n_bins=8, seed=7,
+                frontier_cap=8)
+    one = fit_federated_forest(
+        x, y, 2, ForestParams(trees_per_batch=1, **base))
+    batched = fit_federated_forest(
+        x, y, 2, ForestParams(trees_per_batch=3, **base))
+    _assert_same_forest(one, batched)
+    np.testing.assert_array_equal(one.predict(x), batched.predict(x))
+    # and the batched frontier build still matches the dense lax.map build
+    dense = fit_federated_forest(
+        x, y, 2, ForestParams(**{**base, "frontier_cap": 0}))
+    _assert_same_forest(dense, batched)
+
+
+# --------------------------------------------------- histogram backend registry
+def test_registry_contents_and_auto_resolution():
+    for name in ("scatter", "pallas", "pallas_interpret", "ref"):
+        assert name in ops.available_backends()
+    resolved = ops.resolve_backend("auto")
+    assert resolved in ops.BACKENDS
+    if jax.default_backend() == "cpu":
+        assert resolved == "scatter"
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.resolve_backend("nope")
+
+
+def test_registry_extension_point():
+    calls = []
+
+    @ops.register_backend("_test_probe")
+    def probe(xb, seg, stats, n_level, n_bins):
+        calls.append(n_level)
+        return ops.BACKENDS["scatter"](xb, seg, stats, n_level, n_bins)
+
+    try:
+        rng = np.random.default_rng(0)
+        xb = rng.integers(0, 4, (64, 3)).astype(np.int32)
+        seg = rng.integers(-1, 2, (64,)).astype(np.int32)
+        stats = rng.normal(size=(64, 2)).astype(np.float32)
+        got = ops.histogram(xb, seg, stats, 2, 4, impl="_test_probe")
+        want = ops.histogram(xb, seg, stats, 2, 4, impl="scatter")
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+        assert calls == [2]
+    finally:
+        del ops.BACKENDS["_test_probe"]
+
+
+def test_params_knob_validation():
+    with pytest.raises(ValueError, match="frontier_cap"):
+        ForestParams(frontier_cap=-1)
+    with pytest.raises(ValueError, match="trees_per_batch"):
+        ForestParams(trees_per_batch=0)
