@@ -16,7 +16,7 @@ def main() -> None:
     t0 = time.time()
     from benchmarks import (binning_ablation, comm_complexity, fig3_domains,
                             fig456_prediction, frontier_bench, kernel_bench,
-                            table1_parity)
+                            serving_bench, table1_parity)
 
     if os.environ.get("REPRO_BENCH_FAST"):
         table1_parity.BENCH_SETS = ["ionosphere", "spambase", "waveform",
@@ -28,6 +28,7 @@ def main() -> None:
     binning_ablation.run()
     kernel_bench.run()
     frontier_bench.run()
+    serving_bench.run()
     print(f"# total_bench_wall_s={time.time() - t0:.1f}", file=sys.stderr)
 
 

@@ -1,0 +1,87 @@
+"""Serving engine benchmark: dense vs leaf-compacted one-round prediction.
+
+For each batch bucket, runs repeated request waves through two ForestServers
+sharing one fitted forest — the dense (full-heap mask) baseline and the
+leaf-compacted path — and reports rows/s, p50/p95 wave latency, and the
+per-wave psum payload bytes.  At depth >= 8 the heap is mostly dead
+(n_nodes = 2^(depth+1)-1 vs live leaves bounded by the training rows), so
+the compact mask shrinks the collective and the vote contraction
+proportionally; the derived column carries the measured speedup.
+
+REPRO_BENCH_FAST=1 drops to one depth and fewer/smaller waves (the CI smoke
+configuration).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import ForestParams, fit_federated_forest
+from repro.data import make_classification
+from repro.serving import ForestServer
+
+PARTIES = 3
+
+
+def _servers(depth: int, n_train: int, buckets):
+    p = ForestParams(n_estimators=8, max_depth=depth, n_bins=16, seed=0)
+    x, y = make_classification(n_train, 24, 2, seed=depth)
+    ff = fit_federated_forest(x, y, PARTIES, p)
+    dense = ForestServer.from_forest(ff, compact=False,
+                                     buckets=buckets).warmup()
+    compact = ForestServer.from_forest(ff, compact=True,
+                                       buckets=buckets).warmup()
+    return ff, x, dense, compact
+
+
+def _drive(server: ForestServer, x, bucket: int, waves: int,
+           rng: np.random.Generator):
+    server.wave_stats.clear()
+    for _ in range(waves):
+        rows = x[rng.integers(0, len(x), size=bucket)]
+        server.serve(rows)
+    stats = server.stats_summary()
+    stats["psum_bytes_wave"] = server.wave_stats[-1]["comm_bytes"]
+    return stats
+
+
+def _bench_depth(depth: int, fast: bool) -> list[dict]:
+    buckets = (32, 256) if fast else (32, 256, 2048)
+    waves = 4 if fast else 10
+    ff, x, dense, compact = _servers(depth, 1500 if fast else 4000, buckets)
+    lt = compact.leaf_table
+    rows = []
+    for bucket in buckets:
+        rng = np.random.default_rng(bucket)
+        # warmup wave outside the timed set (first call pays dispatch setup)
+        _drive(dense, x, bucket, 1, rng)
+        _drive(compact, x, bucket, 1, rng)
+        sd = _drive(dense, x, bucket, waves, rng)
+        sc = _drive(compact, x, bucket, waves, rng)
+        speedup = sc["rows_per_s"] / max(sd["rows_per_s"], 1e-12)
+        emit(f"serving/d{depth}_b{bucket}_dense", sd["p50_ms"] / 1e3,
+             f"rows_s={sd['rows_per_s']:.0f}|p95_ms={sd['p95_ms']:.2f}|"
+             f"psum_bytes={sd['psum_bytes_wave']}")
+        emit(f"serving/d{depth}_b{bucket}_compact", sc["p50_ms"] / 1e3,
+             f"rows_s={sc['rows_per_s']:.0f}|p95_ms={sc['p95_ms']:.2f}|"
+             f"psum_bytes={sc['psum_bytes_wave']}|"
+             f"leaf_slots={lt.capacity}_of_{ff.params.n_nodes}|"
+             f"speedup={speedup:.2f}x")
+        rows.append({"depth": depth, "bucket": bucket,
+                     "dense": sd, "compact": sc, "speedup": speedup})
+    return rows
+
+
+def run() -> list[dict]:
+    fast = bool(os.environ.get("REPRO_BENCH_FAST"))
+    depths = (8,) if fast else (8, 10)
+    out = []
+    for d in depths:
+        out.extend(_bench_depth(d, fast))
+    return out
+
+
+if __name__ == "__main__":
+    run()

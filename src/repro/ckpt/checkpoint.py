@@ -67,8 +67,14 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any) -> str:
     return str(final)
 
 
-def restore_checkpoint(directory: str | os.PathLike, step: int,
-                       like: Any) -> Any:
+def peek_checkpoint(directory: str | os.PathLike,
+                    step: int) -> dict[str, np.ndarray]:
+    """Read a checkpoint's flat path->array dict without a ``like`` pytree.
+
+    The payload records dtype/shape per leaf, so readers that know the
+    container layout (e.g. the serving engine reconstructing a PartyTree by
+    field order) can restore without first materializing matching
+    ShapeDtypeStructs."""
     d = pathlib.Path(directory) / f"step_{step:08d}"
     if (d / _ZLIB_NAME).exists():
         raw = zlib.decompress((d / _ZLIB_NAME).read_bytes())
@@ -80,8 +86,13 @@ def restore_checkpoint(directory: str | os.PathLike, step: int,
         raw = zstandard.ZstdDecompressor().decompress(
             (d / _ZSTD_NAME).read_bytes())
     payload = msgpack.unpackb(raw, raw=False)
-    flat = {k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(v["shape"])
+    return {k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(v["shape"])
             for k, v in payload.items()}
+
+
+def restore_checkpoint(directory: str | os.PathLike, step: int,
+                       like: Any) -> Any:
+    flat = peek_checkpoint(directory, step)
     leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     for path, leaf in leaves_like:

@@ -102,6 +102,33 @@ class FederatedForest:
         """Multi-round baseline (paper's comparison in Figs. 4–6)."""
         return self._predict_common(x_test, prediction.forest_predict_classical)
 
+    def leaf_table(self, pad_multiple: int = 8):
+        """Live-leaf compaction plan of the fitted forest (serving/plan.py)."""
+        from repro.serving import plan
+        assert self.trees_ is not None, "fit first"
+        return plan.build_leaf_table(self.trees_, self.params,
+                                     pad_multiple=pad_multiple)
+
+    def predict_compact(self, x_test: np.ndarray,
+                        leaf_table=None) -> np.ndarray:
+        """One-round prediction through the leaf-compacted mask.
+
+        Bit-identical to :meth:`predict` (Prop. 1 is unchanged; only dead
+        heap columns are dropped from the psum and the vote) — the serving
+        engine's kernel, exposed here for parity tests and ad-hoc use."""
+        assert self.trees_ is not None, "fit first"
+        lt = leaf_table if leaf_table is not None else self.leaf_table()
+        xb_parts = self.partition_.bin_test(np.asarray(x_test))
+
+        def pred_fn(trees, xbt, leaf_idx):
+            return prediction.forest_predict_oneround(
+                trees, xbt, self.params, leaf_idx=leaf_idx)
+
+        run = protocol.jit_simulated(pred_fn, n_party=2, n_shared=1)
+        out = np.asarray(run(self.trees_, jnp.asarray(xb_parts),
+                             lt.leaf_idx)[0])
+        return self._decode(out)
+
     # ------------------------------------------------- break-point recovery
     def fit_resumable(self, partition: VerticalPartition, y: np.ndarray,
                       ckpt_dir: str, trees_per_chunk: int = 2) -> "FederatedForest":

@@ -17,6 +17,13 @@ Two algorithms:
     tree count while the one-round method does not.
 
 Both are SPMD over PARTY_AXIS, like the builder.
+
+Prediction-side sparsity (the serving tentpole): most heap slots of a deep
+tree are dead, so ``forest_predict_oneround`` optionally takes a per-tree
+``LeafTable`` (serving/plan.py) and emits the membership mask gathered over
+live leaves — the psum payload and the vote contraction shrink from
+``n_nodes`` columns to the live-leaf capacity, while the Prop. 1 intersection
+semantics (and the bits of every output) are unchanged.
 """
 from __future__ import annotations
 
@@ -59,9 +66,21 @@ def tree_leaf_membership(tree: PartyTree, xb_test: jnp.ndarray,
     return jnp.concatenate(parts, axis=1)                    # (N, n_nodes)
 
 
-def _combine_votes(inter: jnp.ndarray, trees: PartyTree, params: ForestParams,
+def masked_leaf_stats(trees: PartyTree) -> jnp.ndarray:
+    """(T, nn, C) leaf stats with non-leaf rows zeroed (the vote operand)."""
+    return jnp.where(trees.is_leaf[..., None], trees.leaf_stats, 0.0)
+
+
+def _combine_votes(inter: jnp.ndarray, leaf: jnp.ndarray, params: ForestParams,
                    aggregate: bool = True, vote_impl: str = "einsum"):
-    """Forest vote from the (T, N, nn) exact leaf-assignment mask.
+    """Forest vote from the (T, N, L) exact leaf-assignment mask.
+
+    ``leaf`` is the matching (T, L, C) zero-masked leaf-stats tensor — the
+    full heap (L = n_nodes, from :func:`masked_leaf_stats`) or the serving
+    layer's leaf-compacted gather (L = live-leaf slots).  Either way each
+    sample intersects exactly one true leaf column (Prop. 1) and every other
+    column contributes an exact 0.0, so the vote is bit-identical across
+    compactions.
 
     ``aggregate=False`` returns per-tree results (T, N) — used by the
     tree-parallel production mesh, where the final vote is a cross-shard
@@ -69,11 +88,10 @@ def _combine_votes(inter: jnp.ndarray, trees: PartyTree, params: ForestParams,
 
     ``vote_impl='argmax'`` (§Perf, classification only): each sample hits
     exactly one leaf, so the per-tree label is a masked max over int8 leaf
-    labels — no f32 blow-up of the (T, N, nn) mask."""
-    leaf = jnp.where(trees.is_leaf[..., None], trees.leaf_stats, 0.0)
+    labels — no f32 blow-up of the (T, N, L) mask."""
     if params.task == "classification":
         if vote_impl == "argmax":
-            label1 = (jnp.argmax(leaf, -1) + 1).astype(jnp.int8)   # (T, nn)
+            label1 = (jnp.argmax(leaf, -1) + 1).astype(jnp.int8)   # (T, L)
             per_tree = (jnp.max(jnp.where(inter, label1[:, None, :], 0), -1)
                         .astype(jnp.int32) - 1)                    # (T, N)
         else:
@@ -85,31 +103,74 @@ def _combine_votes(inter: jnp.ndarray, trees: PartyTree, params: ForestParams,
         votes = (per_tree[..., None] ==
                  jnp.arange(params.n_classes)[None, None, :]).sum(0)
         return jnp.argmax(votes, -1)
-    vals = impurity.leaf_value(leaf, params.task)            # (T, nn)
+    vals = impurity.leaf_value(leaf, params.task)            # (T, L)
     per_tree = jnp.einsum("tnl,tl->tn", inter.astype(jnp.float32), vals)
     if not aggregate:
         return per_tree
     return per_tree.mean(0)                                  # Alg. 8: averaging
 
 
+def tree_leaf_membership_compact(tree: PartyTree, xb_test: jnp.ndarray,
+                                 params: ForestParams,
+                                 leaf_idx: jnp.ndarray) -> jnp.ndarray:
+    """Leaf-candidate mask gathered over live leaves: (N_t, L) bool.
+
+    ``leaf_idx`` is one tree's row of a serving ``LeafTable`` — the heap ids
+    of its live leaves in ascending (heap) order, -1 padded to the static
+    capacity L.  Routing still walks every heap level (the per-level masks
+    are what descend the tree), but the emitted mask — and with it the
+    one-round psum payload and the vote contraction — shrinks from
+    ``n_nodes`` columns to L.  Column j equals the dense mask's column
+    ``leaf_idx[j]`` exactly; padded columns are identically False, so they
+    can never survive the cross-party intersection."""
+    mem = tree_leaf_membership(tree, xb_test, params)        # (N, nn)
+    valid = leaf_idx >= 0
+    return jnp.take(mem, jnp.clip(leaf_idx, 0), axis=1) & valid[None]
+
+
+def gather_leaf_stats(trees: PartyTree, leaf_idx: jnp.ndarray) -> jnp.ndarray:
+    """(T, L, C) leaf stats gathered over a LeafTable; padded rows zeroed.
+
+    The compact counterpart of :func:`masked_leaf_stats` — gathered rows are
+    leaves by construction, so only table padding needs masking."""
+    idx = jnp.clip(leaf_idx, 0)[..., None]                   # (T, L, 1)
+    stats = jnp.take_along_axis(trees.leaf_stats, idx, axis=1)
+    return jnp.where((leaf_idx >= 0)[..., None], stats, 0.0)
+
+
 def forest_predict_oneround(trees: PartyTree, xb_test: jnp.ndarray,
                             params: ForestParams, aggregate: bool = True,
                             mask_dtype=jnp.int32,
-                            vote_impl: str = "einsum") -> jnp.ndarray:
+                            vote_impl: str = "einsum",
+                            leaf_idx: jnp.ndarray | None = None) -> jnp.ndarray:
     """The paper's one-round prediction. SPMD over PARTY_AXIS.
 
     ``mask_dtype``: the membership masks are 0/1 and M <= 255 parties, so
     a uint8 psum is exact and moves 4x fewer collective bytes than int32 —
     the §Perf-optimized setting (the baseline keeps int32, the naive
-    lowering of a boolean sum)."""
-    def one(tree):
-        return tree_leaf_membership(tree, xb_test, params)
-    mem = lax.map(one, trees)                                # (T, N, nn) bool
+    lowering of a boolean sum).
+
+    ``leaf_idx``: a serving ``LeafTable.leaf_idx`` array ((T, L) live-leaf
+    heap ids, -1 padded — serving/plan.py) switches every tree to the
+    leaf-compacted mask — same Prop. 1 intersection semantics, bit-identical
+    outputs, with the single psum and the vote contraction shrunk from
+    ``n_nodes`` to the table's live-leaf capacity."""
+    if leaf_idx is None:
+        def one(tree):
+            return tree_leaf_membership(tree, xb_test, params)
+        mem = lax.map(one, trees)                            # (T, N, nn) bool
+        leaf = masked_leaf_stats(trees)
+    else:
+        def one(args):
+            tree, idx = args
+            return tree_leaf_membership_compact(tree, xb_test, params, idx)
+        mem = lax.map(one, (trees, leaf_idx))                # (T, N, L) bool
+        leaf = gather_leaf_stats(trees, leaf_idx)
     # === Proposition 1: ONE collective for the whole forest ===
     m = lax.psum(mem.astype(mask_dtype), PARTY_AXIS)
     n_parties = compat.axis_size(PARTY_AXIS)                 # static, no comm
     inter = m == jnp.asarray(n_parties, mask_dtype)          # S^l = ∩ S_i^l
-    return _combine_votes(inter, trees, params, aggregate, vote_impl)
+    return _combine_votes(inter, leaf, params, aggregate, vote_impl)
 
 
 def forest_predict_classical(trees: PartyTree, xb_test: jnp.ndarray,
@@ -133,7 +194,16 @@ def forest_predict_classical(trees: PartyTree, xb_test: jnp.ndarray,
         return inter & tree.is_leaf[None]
 
     inter = lax.map(route_tree, trees)                       # (T, N, nn)
-    return _combine_votes(inter, trees, params)
+    return _combine_votes(inter, masked_leaf_stats(trees), params)
+
+
+def mask_comm_bytes(n_trees: int, n_rows: int, n_cols: int,
+                    mask_dtype=jnp.int32) -> int:
+    """Per-party payload of the one-round membership psum, in bytes.
+
+    ``n_cols`` is ``params.n_nodes`` for the dense mask or the LeafTable
+    capacity for the compacted one — the serving engine reports both."""
+    return n_trees * n_rows * n_cols * jnp.dtype(mask_dtype).itemsize
 
 
 def comm_rounds(params: ForestParams, method: str) -> int:

@@ -75,6 +75,16 @@ class ForestParams:
         return 2 ** (self.max_depth + 1) - 1
 
     @property
+    def max_leaves(self) -> int:
+        """Upper bound on live leaves of one tree.
+
+        Leaves are disjoint, so a depth-``max_depth`` tree has at most
+        ``2^max_depth`` of them — the static clamp for the serving layer's
+        leaf-compacted prediction tables (serving/plan.py).
+        """
+        return 2 ** self.max_depth
+
+    @property
     def n_stat_channels(self) -> int:
         """Label-statistic channels accumulated in histograms.
 

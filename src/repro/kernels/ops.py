@@ -8,6 +8,9 @@
   * ``scatter``           — index-add formulation, fastest on CPU/GPU hosts
                             (used by the single-host simulation path of the
                             federated protocol);
+  * ``segment_sum``       — GPU-oriented ``jax.ops.segment_sum`` over flat
+                            (node, feature, bin) ids; correctness-equivalent
+                            to ``scatter`` on every host;
   * ``ref``               — the einsum oracle.
   * ``auto``              — resolves per host: compiled Pallas on TPU,
                             scatter everywhere else.
@@ -62,17 +65,46 @@ def available_backends() -> tuple[str, ...]:
     return tuple(sorted(BACKENDS))
 
 
-@register_backend("scatter")
-def _histogram_scatter(xb, seg, stats, n_level: int, n_bins: int):
+def _flat_buckets(xb, seg, stats, n_level: int, n_bins: int):
+    """Shared flattening of the scatter-family backends.
+
+    Returns ``(flat, vals)``: a flat (node, feature, bin) bucket id per
+    (sample, feature) — invalid samples (seg < 0) route to the single
+    overflow slot ``n_level * F * n_bins`` — and the matching f32 stat rows.
+    Any backend that reduces by bucket id must use this exact layout so the
+    seg<0 convention stays in one place."""
     n, f = xb.shape
     c = stats.shape[-1]
     xb = xb.astype(jnp.int32)
-    # flat bucket id per (sample, feature); invalid samples -> overflow slot
     base = seg[:, None] * (f * n_bins) + jnp.arange(f)[None, :] * n_bins + xb
     flat = jnp.where(seg[:, None] >= 0, base, n_level * f * n_bins)
     vals = jnp.broadcast_to(stats[:, None, :], (n, f, c)).astype(jnp.float32)
+    return flat.reshape(-1), vals.reshape(-1, c)
+
+
+@register_backend("scatter")
+def _histogram_scatter(xb, seg, stats, n_level: int, n_bins: int):
+    f, c = xb.shape[1], stats.shape[-1]
+    flat, vals = _flat_buckets(xb, seg, stats, n_level, n_bins)
     out = jnp.zeros((n_level * f * n_bins + 1, c), jnp.float32)
-    out = out.at[flat.reshape(-1)].add(vals.reshape(-1, c))
+    out = out.at[flat].add(vals)
+    return out[:-1].reshape(n_level, f, n_bins, c)
+
+
+@register_backend("segment_sum")
+def _histogram_segment_sum(xb, seg, stats, n_level: int, n_bins: int):
+    """GPU-oriented formulation: one ``jax.ops.segment_sum`` over the same
+    flat bucket ids as the scatter backend.
+
+    On GPU, XLA lowers segment_sum to its tuned unsorted-segment-reduction
+    path (atomics over f32), which beats the generic scatter-add lowering at
+    large N x F; on CPU it lowers to the same scatter loop, so it is a
+    correctness-equivalent drop-in everywhere (tests sweep it against the
+    scatter backend)."""
+    f, c = xb.shape[1], stats.shape[-1]
+    flat, vals = _flat_buckets(xb, seg, stats, n_level, n_bins)
+    out = jax.ops.segment_sum(vals, flat,
+                              num_segments=n_level * f * n_bins + 1)
     return out[:-1].reshape(n_level, f, n_bins, c)
 
 

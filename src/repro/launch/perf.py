@@ -84,21 +84,38 @@ def run_nn_variant(arch: str, shape: str, variant: str, force=False) -> dict:
     return rec
 
 
+# ff_train variant name -> (histogram backend, subtraction trick).  The
+# registry key goes straight through ForestParams/forest_case, so any
+# backend registered in kernels.ops (including the GPU segment_sum one) is
+# exercisable from the dry-run hillclimb without touching the builder.
+FF_TRAIN_VARIANTS: dict[str, dict] = {
+    "baseline":          dict(hist_impl="ref"),      # einsum (MXU fidelity)
+    "hist_sub":          dict(hist_impl="ref", hist_subtraction=True),
+    "scatter":           dict(hist_impl="scatter"),
+    "segment_sum":       dict(hist_impl="segment_sum"),
+    "pallas_interpret":  dict(hist_impl="pallas_interpret"),
+    "hist_sub+scatter":  dict(hist_impl="scatter", hist_subtraction=True),
+    "hist_sub+segment_sum": dict(hist_impl="segment_sum",
+                                 hist_subtraction=True),
+}
+
+
 def run_ff_train_variant(variant: str, force=False) -> dict:
     """ff_train variants: einsum (MXU-fidelity) histogram baseline vs the
-    beyond-paper histogram-subtraction trick."""
+    beyond-paper histogram-subtraction trick, across histogram backends."""
     from repro.core.types import ForestParams
     out = OUT_DIR / f"federated-forest__ff_train__{variant}.json"
     if out.exists() and not force:
         return json.loads(out.read_text())
+    kw = FF_TRAIN_VARIANTS[variant]
     fs = cases.FOREST_SHAPES["ff_train"]
     p = ForestParams(task="classification", n_classes=2,
                      n_estimators=fs.n_trees_per_shard, max_depth=8,
                      n_bins=32,
-                     hist_subtraction=variant.endswith("hist_sub"))
+                     hist_subtraction=kw.get("hist_subtraction", False))
     mesh = mesh_mod.make_forest_mesh()
     fn, args, _ = cases.forest_case("ff_train", mesh, params=p,
-                                    hist_impl="ref")
+                                    hist_impl=kw["hist_impl"])
     t0 = time.time()
     compiled = jax.jit(fn).lower(*args).compile()
     r = rl.analyze(compiled)
@@ -117,33 +134,44 @@ def run_ff_variant(variant: str, force=False) -> dict:
     if out.exists() and not force:
         return json.loads(out.read_text())
     mask_dtype = {"baseline": jnp.int32, "mask_u8": jnp.uint8,
-                  "mask_u8+argmax": jnp.uint8}[variant]
+                  "mask_u8+argmax": jnp.uint8,
+                  "mask_u8+compact": jnp.uint8}[variant]
     vote_impl = "argmax" if variant.endswith("argmax") else "einsum"
+    compact = variant.endswith("compact")
     mesh = mesh_mod.make_forest_mesh()
     # rebuild the predict case with the dtype knob
     fn, args, p = cases.forest_case("ff_predict", mesh)
     if variant != "baseline":
-        fs = cases.FOREST_SHAPES["ff_predict"]
-        m = mesh.shape["parties"]
         from jax.sharding import PartitionSpec as P
         trees_shape, xb_test = args
+        t_global = jax.tree_util.tree_leaves(trees_shape)[0].shape[1]
+        shared_shapes, shared_specs = (), ()
+        if compact:
+            # serving-engine leaf table at full bottom-level capacity — the
+            # worst-case compact lowering (2^depth slots vs 2^(depth+1)-1)
+            shared_shapes = (
+                jax.ShapeDtypeStruct((t_global, 2 ** p.max_depth), jnp.int32),)
+            shared_specs = (P("trees"),)
+            args = args + shared_shapes
 
-        def predict_local(tr, xbt):
+        def predict_local(tr, xbt, *shared):
             tr = jax.tree.map(lambda a: a[0], tr)
             per_tree = prediction.forest_predict_oneround(
                 tr, xbt[0], p, aggregate=False, mask_dtype=mask_dtype,
-                vote_impl=vote_impl)
+                vote_impl=vote_impl,
+                leaf_idx=shared[0] if shared else None)
             return per_tree[None]
 
         tree_specs = jax.tree.map(lambda _: P("parties", "trees"), trees_shape,
                                   is_leaf=lambda x: hasattr(x, "shape"))
         inner = compat.shard_map(predict_local, mesh=mesh,
-                                 in_specs=(tree_specs, P("parties")),
+                                 in_specs=(tree_specs, P("parties"))
+                                 + shared_specs,
                                  out_specs=P("parties", "trees"),
                                  check_vma=False)
 
-        def fn(trees, xbt):  # noqa: F811 — same vote wrapper as forest_case
-            per_tree = inner(trees, xbt)
+        def fn(trees, xbt, *shared):  # noqa: F811 — vote as in forest_case
+            per_tree = inner(trees, xbt, *shared)
             votes = (per_tree[0][..., None]
                      == jnp.arange(p.n_classes)[None, None]).sum(0)
             return jnp.argmax(votes, -1)

@@ -1,0 +1,99 @@
+"""Serving driver for the federated forest: batched one-round prediction.
+
+Fits (or checkpoint-restores) a forest, stands up a ForestServer, and pushes
+randomized request traffic through the RequestQueue — the forest counterpart
+of launch/serve.py's transformer decode driver.  Reports per-wave latency,
+aggregate rows/s, psum payload bytes, and the compile count (which must stop
+growing after warmup: the bucket/pad/compile-once contract).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve_forest --parties 4 --depth 8
+  PYTHONPATH=src python -m repro.launch.serve_forest --dense   # no LeafTable
+  PYTHONPATH=src python -m repro.launch.serve_forest --ckpt-dir /tmp/ff \
+      --save-ckpt   # round-trip through ckpt/checkpoint.py first
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import ForestParams, fit_federated_forest
+from repro.data import make_classification
+from repro.serving import ForestServer, RequestQueue
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parties", type=int, default=3)
+    ap.add_argument("--trees", type=int, default=8)
+    ap.add_argument("--depth", type=int, default=8)
+    ap.add_argument("--train-rows", type=int, default=2000)
+    ap.add_argument("--features", type=int, default=24)
+    ap.add_argument("--buckets", default="32,256,2048")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="random requests per traffic round")
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--dense", action="store_true",
+                    help="disable leaf compaction (baseline mask)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore the PartyTree stack from this checkpoint "
+                         "directory instead of using the in-memory fit")
+    ap.add_argument("--save-ckpt", action="store_true",
+                    help="save the fitted forest to --ckpt-dir first")
+    args = ap.parse_args()
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+
+    p = ForestParams(n_estimators=args.trees, max_depth=args.depth,
+                     n_bins=16, seed=0)
+    x, y = make_classification(args.train_rows, args.features, 2, seed=0)
+    t0 = time.time()
+    ff = fit_federated_forest(x, y, args.parties, p)
+    print(f"fit: {args.trees} trees x depth {args.depth} over "
+          f"{args.parties} parties in {time.time() - t0:.1f}s")
+
+    if args.ckpt_dir and args.save_ckpt:
+        from repro import ckpt
+        ckpt.save_checkpoint(args.ckpt_dir, args.trees, ff.trees_)
+    if args.ckpt_dir:
+        server = ForestServer.from_checkpoint(
+            args.ckpt_dir, p, compact=not args.dense, buckets=buckets,
+            partition=ff.partition_, decode=ff._decode)
+        print(f"restored PartyTree stack from {args.ckpt_dir}")
+    else:
+        server = ForestServer.from_forest(ff, compact=not args.dense,
+                                          buckets=buckets)
+    if server.leaf_table is not None:
+        from repro.serving.plan import compaction_ratio
+        print(f"leaf table: {server.leaf_table.capacity} slots vs "
+              f"{p.n_nodes} heap nodes "
+              f"({compaction_ratio(server.leaf_table, p):.1f}x compaction)")
+
+    t0 = time.time()
+    server.warmup()
+    print(f"warmup: compiled {server.compile_count} bucket executables "
+          f"{buckets} in {time.time() - t0:.1f}s")
+
+    rng = np.random.default_rng(1)
+    queue = RequestQueue(server)
+    for rnd in range(args.rounds):
+        sizes = rng.integers(1, buckets[-1] // 2, size=args.requests)
+        for s in sizes:
+            queue.submit(x[rng.integers(0, len(x), size=s)])
+        t0 = time.time()
+        results = queue.drain()
+        dt = time.time() - t0
+        rows = int(sizes.sum())
+        print(f"round {rnd}: {len(results)} requests / {rows} rows in "
+              f"{dt:.3f}s ({rows / max(dt, 1e-9):.0f} rows/s)")
+    s = server.stats_summary()
+    print(f"summary: waves={s['waves']} p50={s['p50_ms']:.2f}ms "
+          f"p95={s['p95_ms']:.2f}ms rows/s={s['rows_per_s']:.0f} "
+          f"psum_bytes_total={s['comm_bytes_total']} "
+          f"compiles={s['compile_count']}")
+    assert server.compile_count == len(buckets), "recompiled after warmup!"
+
+
+if __name__ == "__main__":
+    main()

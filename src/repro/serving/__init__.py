@@ -1,0 +1,30 @@
+"""Federated forest inference serving engine.
+
+Turns the paper's one-round prediction protocol (§4.2, Prop. 1) into a
+servable system, in three pieces:
+
+  * ``plan``   — LeafTable: per-tree live-leaf index tables.  A deep heap is
+    mostly dead slots, so the membership mask, its single psum, and the vote
+    contraction are gathered over live leaves (bit-identical outputs — the
+    intersection semantics do not change, only which columns are carried).
+  * ``engine`` — ForestServer: bucket / pad / compile-once.  Traffic arrives
+    in arbitrary batch sizes; the server pads each request up to a small set
+    of row buckets (default 32/256/2048) and AOT-compiles one executable per
+    bucket, so steady-state serving never recompiles (``compile_count`` is
+    the proof).  Oversized requests run as micro-batched waves of the
+    largest bucket; per-wave latency/throughput/psum-bytes land in
+    ``wave_stats``.  Execution is the same SPMD protocol as training:
+    ``run_simulated`` (vmap) on one host, or shard_map over a
+    (trees, parties) mesh with the ``aggregate=False`` per-tree hook and the
+    forest vote as the caller-side cross-shard reduction.
+  * ``queue``  — RequestQueue: continuous micro-batching.  Pending requests
+    coalesce into waves across request boundaries (many small requests share
+    one launch; a huge one spans several), like launch/serve.py's slot-based
+    batching for the transformer decode path.
+
+Entry points: ``launch/serve_forest.py`` (CLI traffic driver) and
+``benchmarks/serving_bench.py`` (dense vs leaf-compacted rows/s, p50/p95).
+"""
+from repro.serving.engine import ForestServer, load_forest_trees  # noqa: F401
+from repro.serving.plan import LeafTable, build_leaf_table  # noqa: F401
+from repro.serving.queue import RequestQueue  # noqa: F401

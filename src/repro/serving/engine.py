@@ -1,0 +1,281 @@
+"""ForestServer — compile-once, bucketed federated forest inference engine.
+
+Serving traffic arrives in arbitrary batch sizes; jit'd XLA executables want
+static shapes.  The engine bridges the two the same way launch/serve.py does
+for the transformer path:
+
+  * requests are padded up to a small set of BUCKET row counts (default
+    32/256/2048) and each bucket's prediction program is lowered and compiled
+    exactly once (AOT ``jit(...).lower(...).compile()``), so steady-state
+    traffic never recompiles — ``compile_count`` is the proof, asserted in
+    tests/test_serving.py;
+  * oversized requests are chopped into waves of the largest bucket
+    (micro-batching); per-wave latency / rows-per-second / psum payload bytes
+    are recorded in ``wave_stats``;
+  * the prediction program is the paper's one-round protocol, SPMD over the
+    party axis — ``protocol.run_simulated`` (vmap, single host) or
+    ``run_sharded`` (shard_map over a (trees, parties) mesh, with the
+    ``aggregate=False`` per-tree hook and the forest vote as the cross-shard
+    reduction, exactly like launch/cases.forest_case);
+  * with ``compact=True`` (default) a ``LeafTable`` (plan.py) switches the
+    kernel to the leaf-compacted membership mask — bit-identical outputs,
+    psum and vote shrunk from ``n_nodes`` to live-leaf columns.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.ckpt import checkpoint as ckpt
+from repro.core import prediction, protocol
+from repro.core.tree import PartyTree
+from repro.core.types import ForestParams
+from repro.serving import plan
+
+DEFAULT_BUCKETS = (32, 256, 2048)
+
+
+def load_forest_trees(ckpt_dir: str, step: int | None = None) -> PartyTree:
+    """Restore a fitted PartyTree stack (leading (M, T, ...) axes) from a
+    ckpt/checkpoint.py snapshot — the exact artifact fit_resumable saves.
+
+    PartyTree is a NamedTuple, so its checkpoint keys are the field names
+    (".is_leaf", ".leaf_stats", ...) — enough to reconstruct it without a
+    caller-provided ``like`` pytree."""
+    if step is None:
+        step = ckpt.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    flat = ckpt.peek_checkpoint(ckpt_dir, step)
+    keys = [f".{name}" for name in PartyTree._fields]
+    if sorted(flat) != sorted(keys):
+        raise ValueError(
+            f"checkpoint at {ckpt_dir} step {step} is not a bare PartyTree "
+            f"(keys {sorted(flat)})")
+    return PartyTree(*(jnp.asarray(flat[k]) for k in keys))
+
+
+class ForestServer:
+    """Batched one-round prediction server over a fitted federated forest.
+
+    Args:
+      trees: PartyTree stack with leading (M, T, ...) axes (all parties'
+        partial trees — what fit() produces and checkpoints store).
+      params: the forest's ForestParams (static compile keys).
+      buckets: ascending batch-row buckets; requests pad to the smallest
+        fitting bucket, larger ones run in waves of the biggest.
+      compact: serve through the leaf-compacted kernel (LeafTable).
+      mesh: None -> run_simulated (vmap); a Mesh with ("trees", "parties")
+        axes -> run_sharded party-SPMD x tree-sharded execution.
+      partition: optional VerticalPartition for binning raw feature rows.
+      decode: optional label decode applied to served outputs (crypto.py).
+    """
+
+    def __init__(self, trees: PartyTree, params: ForestParams, *,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 compact: bool = True, mask_dtype=jnp.uint8,
+                 vote_impl: str = "einsum", mesh=None,
+                 partition=None, decode: Callable | None = None,
+                 leaf_pad_multiple: int = 8,
+                 n_features_per_party: int | None = None):
+        if not buckets or list(buckets) != sorted(set(buckets)):
+            raise ValueError(f"buckets must be ascending/unique: {buckets}")
+        self.trees = jax.tree.map(jnp.asarray, trees)
+        self.params = params
+        self.buckets = tuple(int(b) for b in buckets)
+        self.compact = compact
+        self.mask_dtype = mask_dtype
+        self.vote_impl = vote_impl
+        self.mesh = mesh
+        self.partition = partition
+        self.decode = decode
+        self.n_parties = int(self.trees.is_leaf.shape[0])
+        self.leaf_table = (plan.build_leaf_table(
+            self.trees, params, pad_multiple=leaf_pad_multiple)
+            if compact else None)
+        self.compile_count = 0
+        # bounded: a long-running server must not leak one dict per wave
+        self.wave_stats: collections.deque = collections.deque(maxlen=4096)
+        self._exec: dict[int, Callable] = {}
+        self._request_fp = n_features_per_party
+
+    # ------------------------------------------------------------ factories
+    @classmethod
+    def from_forest(cls, forest, **kw) -> "ForestServer":
+        """Wrap a fitted core.forest.FederatedForest (binning + decode ride
+        along, so the server accepts raw feature rows)."""
+        assert forest.trees_ is not None, "fit first"
+        kw.setdefault("partition", forest.partition_)
+        kw.setdefault("decode", forest._decode)
+        return cls(forest.trees_, forest.params, **kw)
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, params: ForestParams,
+                        step: int | None = None, **kw) -> "ForestServer":
+        """Load the PartyTree stack via ckpt/checkpoint.py and serve it."""
+        return cls(load_forest_trees(ckpt_dir, step), params, **kw)
+
+    # ------------------------------------------------------- compile layer
+    def _predict_fn(self):
+        p, vote, md, lt = self.params, self.vote_impl, self.mask_dtype, \
+            self.leaf_table
+
+        def fn(trees, xbt, *shared):
+            return prediction.forest_predict_oneround(
+                trees, xbt, p, aggregate=True, mask_dtype=md,
+                vote_impl=vote, leaf_idx=shared[0] if shared else None)
+        return fn, (() if lt is None else (lt.leaf_idx,))
+
+    def _build_sharded(self):
+        """shard_map program: parties x trees sharded, per-tree outputs
+        reduced by the caller-side forest vote (the aggregate=False hook)."""
+        from jax.sharding import PartitionSpec as P
+        p, vote, md, lt = self.params, self.vote_impl, self.mask_dtype, \
+            self.leaf_table
+        tree_specs = jax.tree.map(lambda _: P("parties", "trees"), self.trees,
+                                  is_leaf=lambda x: hasattr(x, "shape"))
+
+        def predict_local(tr, xbt, *shared):
+            tr = jax.tree.map(lambda a: a[0], tr)            # drop party dim
+            per_tree = prediction.forest_predict_oneround(
+                tr, xbt[0], p, aggregate=False, mask_dtype=md,
+                vote_impl=vote, leaf_idx=shared[0] if shared else None)
+            return per_tree[None]                            # (1, T_loc, N)
+
+        shared = () if lt is None else (lt.leaf_idx,)
+        in_specs = (tree_specs, P("parties")) + (P("trees"),) * len(shared)
+        inner = compat.shard_map(predict_local, mesh=self.mesh,
+                                 in_specs=in_specs,
+                                 out_specs=P("parties", "trees"),
+                                 check_vma=False)
+
+        def fn(trees, xbt, *shared):
+            per_tree = inner(trees, xbt, *shared)            # (m, T, N)
+            if p.task == "classification":
+                votes = (per_tree[0][..., None] ==
+                         jnp.arange(p.n_classes)[None, None]).sum(0)
+                return jnp.argmax(votes, -1)
+            return per_tree[0].mean(0)
+        return fn, shared
+
+    def _executable(self, bucket: int):
+        if bucket in self._exec:
+            return self._exec[bucket]
+        xbt = jnp.zeros((self.n_parties, bucket, self._fp()), jnp.uint8)
+        if self.mesh is not None:
+            fn, shared = self._build_sharded()
+            args = (self.trees, xbt) + shared
+            with compat.set_mesh(self.mesh):
+                compiled = jax.jit(fn).lower(*args).compile()
+        else:
+            fn, shared = self._predict_fn()
+
+            def wave(trees, xbt, *shared):
+                return protocol.run_simulated(fn, (trees, xbt), shared)
+            args = (self.trees, xbt) + shared
+            compiled = jax.jit(wave).lower(*args).compile()
+        self.compile_count += 1
+        self._exec[bucket] = compiled
+        return compiled
+
+    def _fp(self) -> int:
+        """Per-party (padded) feature width of request rows."""
+        if self.partition is not None:
+            return int(self.partition.feat_gid.shape[1])
+        if self._request_fp is None:
+            raise ValueError(
+                "feature width unknown: pass n_features_per_party / a "
+                "partition, or serve a binned batch before warmup()")
+        return int(self._request_fp)
+
+    def warmup(self) -> "ForestServer":
+        """Pre-lower + compile every bucket (the compile-once contract)."""
+        for b in self.buckets:
+            self._executable(b)
+        return self
+
+    # ---------------------------------------------------------- serve layer
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def serve_binned(self, xb_parts: np.ndarray) -> np.ndarray:
+        """Serve pre-binned, pre-partitioned rows: (M, n, Fp) uint8 -> (n,).
+
+        Chops into waves of at most the largest bucket, pads each wave to
+        its bucket, strips padding from the outputs."""
+        xb_parts = np.asarray(xb_parts)
+        m, n, fp = xb_parts.shape
+        if m != self.n_parties:
+            raise ValueError(f"expected {self.n_parties} parties, got {m}")
+        self._request_fp = fp
+        if n == 0:                                    # empty batch: no wave
+            dt = (np.int32 if self.params.task == "classification"
+                  else np.float32)
+            return np.empty((0,), dt)
+        outs = []
+        lo = 0
+        while lo < n:
+            hi = min(lo + self.buckets[-1], n)
+            outs.append(self._serve_wave(xb_parts[:, lo:hi]))
+            lo = hi
+        return np.concatenate(outs) if len(outs) > 1 else outs[0]
+
+    def serve(self, x_test: np.ndarray) -> np.ndarray:
+        """Serve raw feature rows (n, F) — requires a partition for binning."""
+        if self.partition is None:
+            raise ValueError("raw-row serving needs a VerticalPartition")
+        out = self.serve_binned(self.partition.bin_test(np.asarray(x_test)))
+        return self.decode(out) if self.decode is not None else out
+
+    def _serve_wave(self, xb_parts: np.ndarray) -> np.ndarray:
+        m, n, fp = xb_parts.shape
+        bucket = self._bucket_for(n)
+        compiled = self._executable(bucket)
+        if n < bucket:
+            xb_parts = np.pad(xb_parts, ((0, 0), (0, bucket - n), (0, 0)))
+        shared = (() if self.leaf_table is None
+                  else (self.leaf_table.leaf_idx,))
+        t0 = time.perf_counter()
+        out = compiled(self.trees, jnp.asarray(xb_parts), *shared)
+        out = jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        n_cols = (self.params.n_nodes if self.leaf_table is None
+                  else self.leaf_table.capacity)
+        n_trees = int(self.trees.is_leaf.shape[1])    # actual stack, not
+        self.wave_stats.append({                      # params (fit_resumable
+            "bucket": bucket, "n_rows": n,            # chunks can be partial)
+            "latency_s": dt,
+            "rows_per_s": n / max(dt, 1e-12),
+            "comm_bytes": prediction.mask_comm_bytes(
+                n_trees, bucket, n_cols, self.mask_dtype),
+        })
+        out = np.asarray(out)
+        return out[0][:n] if out.ndim > 1 else out[:n]
+
+    # ------------------------------------------------------------ reporting
+    def stats_summary(self) -> dict:
+        """p50/p95 latency + aggregate throughput over recorded waves.
+
+        ``comm_bytes_total`` sums every recorded wave's psum payload, so it
+        stays honest under mixed-bucket traffic (per-wave values live in
+        ``wave_stats``)."""
+        if not self.wave_stats:
+            return {}
+        lat = np.array([w["latency_s"] for w in self.wave_stats])
+        rows = sum(w["n_rows"] for w in self.wave_stats)
+        return {"waves": len(lat), "rows": rows,
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p95_ms": float(np.percentile(lat, 95) * 1e3),
+                "rows_per_s": rows / max(float(lat.sum()), 1e-12),
+                "comm_bytes_total": sum(w["comm_bytes"]
+                                        for w in self.wave_stats),
+                "compile_count": self.compile_count}

@@ -1,0 +1,72 @@
+"""Leaf-compaction planning for federated forest serving.
+
+A fitted tree's heap arrays are mostly dead slots: a depth-``d`` heap has
+``2^(d+1)-1`` nodes but at most ``2^d`` leaves, and in practice far fewer are
+live (bounded by the training-sample count and shrinking as branches bottom
+out).  The builder already compacts *levels* (frontier_cap); this module
+compacts the *prediction* side the same way — per tree, the heap ids of its
+live leaves are packed into a dense ``LeafTable`` so the one-round membership
+mask, its psum, and the vote contraction all run over ``L`` live-leaf slots
+instead of the full heap.
+
+``is_leaf`` is shared structure (every party stores it identically, paper
+§3.1 "keeping the node structure"), so the table is computed once from any
+party's view and broadcast as a *shared* argument of the SPMD predictor —
+compaction adds no per-party state and no extra communication.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import PartyTree
+from repro.core.types import ForestParams
+
+
+class LeafTable(NamedTuple):
+    """Per-tree live-leaf index table (static capacity L).
+
+    leaf_idx: (T, L) int32 — heap node id of each live leaf in ascending
+              (heap) order; -1 pads up to the shared static capacity.
+    n_live:   (T,)   int32 — live-leaf count per tree (<= L).
+    """
+
+    leaf_idx: jnp.ndarray
+    n_live: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        return int(self.leaf_idx.shape[-1])
+
+
+def build_leaf_table(trees: PartyTree, params: ForestParams, *,
+                     pad_multiple: int = 8) -> LeafTable:
+    """Plan the compact leaf layout of a fitted forest (host-side, once).
+
+    Accepts a PartyTree stack with leading (T, ...) or (M, T, ...) axes —
+    ``is_leaf`` is shared, so the first party's view is authoritative.  The
+    capacity L is the max live-leaf count over trees, rounded up to
+    ``pad_multiple`` (so nearby forest sizes reuse compiled executables) and
+    clamped to ``params.max_leaves``.
+    """
+    is_leaf = np.asarray(trees.is_leaf)
+    if is_leaf.ndim == 3:                       # (M, T, nn) -> shared view
+        is_leaf = is_leaf[0]
+    t, nn = is_leaf.shape
+    counts = is_leaf.sum(axis=1).astype(np.int32)
+    cap = max(1, int(counts.max()) if t else 1)
+    cap = -(-cap // pad_multiple) * pad_multiple
+    cap = min(cap, params.max_leaves, nn)
+    cap = max(cap, int(counts.max()) if t else 1)  # clamp never loses leaves
+    idx = np.full((t, cap), -1, np.int32)
+    for i in range(t):
+        ids = np.flatnonzero(is_leaf[i])
+        idx[i, : len(ids)] = ids
+    return LeafTable(jnp.asarray(idx), jnp.asarray(counts))
+
+
+def compaction_ratio(table: LeafTable, params: ForestParams) -> float:
+    """Dense mask columns / compact mask columns — the psum/vote shrink."""
+    return params.n_nodes / max(table.capacity, 1)

@@ -1,0 +1,98 @@
+"""Request queue with continuous micro-batching over a ForestServer.
+
+Requests of arbitrary row counts are enqueued; ``drain()`` coalesces pending
+rows into waves (many small requests share one executable launch; a huge
+request spans several), serves them through the engine's bucketed,
+compile-once path, and scatters each wave's outputs back to the requests it
+carried — the forest analogue of launch/serve.py's slot-based continuous
+batching for the transformer decode loop.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.serving.engine import ForestServer
+
+
+@dataclasses.dataclass
+class _Pending:
+    rid: int
+    xb_parts: np.ndarray        # (M, n, Fp) binned party rows
+    t_submit: float
+    done: int = 0               # rows already served
+    out: np.ndarray | None = None
+
+
+class RequestQueue:
+    """FIFO queue of prediction requests over one ForestServer."""
+
+    def __init__(self, server: ForestServer, max_wave_rows: int | None = None):
+        self.server = server
+        self.max_wave_rows = max_wave_rows or server.buckets[-1]
+        self._pending: list[_Pending] = []
+        self._next_id = 0
+        # bounded, like the server's wave_stats: no per-request leak
+        self.request_stats: collections.deque = collections.deque(maxlen=4096)
+
+    def submit(self, x: np.ndarray, *, binned: bool = False) -> int:
+        """Enqueue one request; returns its id (resolved by drain())."""
+        if binned:
+            xb = np.asarray(x)
+        else:
+            if self.server.partition is None:
+                raise ValueError("raw submit needs a server partition")
+            xb = self.server.partition.bin_test(np.asarray(x))
+        p = _Pending(self._next_id, xb, time.perf_counter())
+        self._pending.append(p)
+        self._next_id += 1
+        return p.rid
+
+    def drain(self) -> dict[int, np.ndarray]:
+        """Serve everything pending; returns {request_id: predictions}."""
+        results: dict[int, np.ndarray] = {}
+        while self._pending:
+            # ---- coalesce the next wave across request boundaries --------
+            wave, spans, rows = [], [], 0
+            for p in self._pending:
+                remaining = p.xb_parts.shape[1] - p.done
+                if remaining == 0:          # zero-row request: retire below
+                    continue
+                take = min(remaining, self.max_wave_rows - rows)
+                if take == 0:               # wave is full
+                    break
+                wave.append(p.xb_parts[:, p.done:p.done + take])
+                spans.append((p, p.done, take))
+                rows += take
+            if wave:
+                out = self.server.serve_binned(np.concatenate(wave, axis=1))
+                lo = 0
+                for p, start, take in spans:
+                    seg = out[lo:lo + take]
+                    if p.out is None:
+                        p.out = np.empty(p.xb_parts.shape[1], seg.dtype)
+                    p.out[start:start + take] = seg
+                    p.done += take
+                    lo += take
+            # ---- retire completed requests -------------------------------
+            still = []
+            for p in self._pending:
+                if p.done == p.xb_parts.shape[1]:
+                    if p.out is None:       # zero-row request
+                        dt = (np.int32 if self.server.params.task
+                              == "classification" else np.float32)
+                        p.out = np.empty((0,), dt)
+                    out_p = p.out
+                    if self.server.decode is not None:
+                        out_p = self.server.decode(out_p)
+                    results[p.rid] = out_p
+                    self.request_stats.append({
+                        "rid": p.rid, "rows": int(p.done),
+                        "latency_s": time.perf_counter() - p.t_submit})
+                else:
+                    still.append(p)
+            self._pending = still
+        return results

@@ -26,7 +26,7 @@ def test_histogram_pallas_matches_ref(n, f, b, l, c):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("impl", ["scatter", "pallas", "ref"])
+@pytest.mark.parametrize("impl", ["scatter", "pallas", "ref", "segment_sum"])
 def test_histogram_impl_agreement(impl):
     rng = np.random.default_rng(0)
     xb = jnp.asarray(rng.integers(0, 16, (257, 9)), jnp.int32)
@@ -35,6 +35,21 @@ def test_histogram_impl_agreement(impl):
     want = histogram_ref(xb, seg, stats, 4, 16)
     got = ops.histogram(xb, seg, stats, 4, 16, impl)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,f,b,l,c", [(64, 3, 8, 1, 2), (300, 11, 16, 6, 3),
+                                       (1030, 17, 64, 32, 5)])
+def test_segment_sum_matches_scatter(n, f, b, l, c):
+    """The GPU segment-sum backend is a drop-in for scatter (CPU sweep);
+    both accumulate identical flat bucket ids, so agreement is exact up to
+    f32 reduction order."""
+    rng = np.random.default_rng(n + f)
+    xb = jnp.asarray(rng.integers(0, b, (n, f)), jnp.int32)
+    seg = jnp.asarray(rng.integers(-1, l, (n,)), jnp.int32)
+    stats = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    want = ops.histogram(xb, seg, stats, l, b, "scatter")
+    got = ops.histogram(xb, seg, stats, l, b, "segment_sum")
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
 
 
 def test_histogram_stats_dtype_bf16_inputs():

@@ -1,0 +1,244 @@
+"""Serving engine tests: leaf-compacted prediction bit-identity, the
+bucket/pad/compile-once ForestServer contract, checkpoint loading, and the
+vote-impl parity matrix.
+
+The load-bearing claim mirrors the builder's: compaction only drops dead
+mask columns, so the one-round prediction through a LeafTable is
+BIT-IDENTICAL to the dense path — classification and regression, aggregated
+and per-tree, across party counts (the multi-party run_simulated path).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ckpt
+from repro.core import (ForestParams, fit_federated_forest, prediction,
+                        protocol)
+from repro.data import make_classification, make_regression
+from repro.serving import ForestServer, RequestQueue, load_forest_trees
+
+
+@pytest.fixture(scope="module")
+def cls_forest():
+    x, y = make_classification(900, 24, 3, seed=0)
+    p = ForestParams(n_classes=3, n_estimators=5, max_depth=8, n_bins=16,
+                     seed=1)
+    return fit_federated_forest(x[:700], y[:700], 3, p), x[700:]
+
+
+@pytest.fixture(scope="module")
+def reg_forest():
+    x, y = make_regression(600, 18, seed=2)
+    p = ForestParams(task="regression", n_estimators=4, max_depth=7,
+                     n_bins=16, seed=3)
+    return fit_federated_forest(x[:450], y[:450], 2, p), x[450:]
+
+
+def _run_spmd(ff, x_test, **kw):
+    """forest_predict_oneround through the multi-party run_simulated path."""
+    xb = jnp.asarray(ff.partition_.bin_test(np.asarray(x_test)))
+
+    def fn(trees, xbt):
+        return prediction.forest_predict_oneround(trees, xbt, ff.params, **kw)
+    return np.asarray(protocol.run_simulated(fn, (ff.trees_, xb)))
+
+
+# --------------------------------------------------------------- leaf table
+def test_leaf_table_structure(cls_forest):
+    ff, _ = cls_forest
+    lt = ff.leaf_table()
+    is_leaf = np.asarray(ff.trees_.is_leaf[0])               # shared view
+    t, nn = is_leaf.shape
+    idx, n_live = np.asarray(lt.leaf_idx), np.asarray(lt.n_live)
+    assert lt.capacity <= ff.params.max_leaves
+    np.testing.assert_array_equal(n_live, is_leaf.sum(1))
+    for i in range(t):
+        ids = idx[i][idx[i] >= 0]
+        assert len(ids) == n_live[i] <= lt.capacity
+        assert (np.diff(ids) > 0).all()                      # heap order
+        assert is_leaf[i][ids].all()                         # only live leaves
+        assert (idx[i][n_live[i]:] == -1).all()              # tail is padding
+
+
+# ------------------------------------------------- bit-identity, all routes
+def test_compact_bit_identical_classification(cls_forest):
+    ff, xte = cls_forest
+    np.testing.assert_array_equal(ff.predict(xte), ff.predict_compact(xte))
+
+
+def test_compact_bit_identical_regression(reg_forest):
+    ff, xte = reg_forest
+    dense, compact = ff.predict(xte), ff.predict_compact(xte)
+    assert dense.dtype == compact.dtype
+    np.testing.assert_array_equal(dense, compact)            # bit-identical
+
+
+@pytest.mark.parametrize("aggregate", [True, False])
+def test_compact_bit_identical_per_tree(cls_forest, aggregate):
+    """The tree-sharded production hook (aggregate=False) compacts too."""
+    ff, xte = cls_forest
+    lt = ff.leaf_table()
+    dense = _run_spmd(ff, xte, aggregate=aggregate)
+    compact = _run_spmd(ff, xte, aggregate=aggregate,
+                        leaf_idx=lt.leaf_idx)
+    np.testing.assert_array_equal(dense, compact)
+
+
+def test_compact_mask_columns_match_dense(cls_forest):
+    """Column j of the compact mask IS dense column leaf_idx[j] (per party)."""
+    ff, xte = cls_forest
+    lt = ff.leaf_table()
+    xb = jnp.asarray(ff.partition_.bin_test(np.asarray(xte)))[0]  # party 0
+    tree0 = jax.tree.map(lambda a: a[0, 0], ff.trees_)
+    dense = np.asarray(prediction.tree_leaf_membership(
+        tree0, xb, ff.params))
+    compact = np.asarray(prediction.tree_leaf_membership_compact(
+        tree0, xb, ff.params, lt.leaf_idx[0]))
+    idx = np.asarray(lt.leaf_idx[0])
+    valid = idx >= 0
+    np.testing.assert_array_equal(compact[:, valid], dense[:, idx[valid]])
+    assert not compact[:, ~valid].any()                      # padding is dead
+
+
+# ----------------------------------------------------- vote-impl parity
+@pytest.mark.parametrize("aggregate", [True, False])
+@pytest.mark.parametrize("compact", [False, True])
+def test_vote_impl_parity(cls_forest, aggregate, compact):
+    """argmax (masked-max over int8 leaf labels) == einsum vote, aggregated
+    and per-tree, dense and leaf-compacted: each sample hits exactly one
+    leaf, so both reduce the same single nonzero contribution."""
+    ff, xte = cls_forest
+    li = ff.leaf_table().leaf_idx if compact else None
+    ein = _run_spmd(ff, xte, aggregate=aggregate, vote_impl="einsum",
+                    leaf_idx=li)
+    arg = _run_spmd(ff, xte, aggregate=aggregate, vote_impl="argmax",
+                    leaf_idx=li)
+    np.testing.assert_array_equal(ein, arg)
+
+
+# -------------------------------------------------- checkpoint round-trip
+def test_forest_checkpoint_roundtrip(cls_forest, tmp_path):
+    """save/restore of the fitted PartyTree stack through ckpt/checkpoint.py
+    — the exact load path ForestServer.from_checkpoint depends on."""
+    ff, xte = cls_forest
+    ckpt.save_checkpoint(tmp_path, 5, ff.trees_)
+    restored = load_forest_trees(str(tmp_path))              # latest step
+    for a, b in zip(jax.tree_util.tree_leaves(ff.trees_),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    server = ForestServer.from_checkpoint(
+        str(tmp_path), ff.params, buckets=(64, 256),
+        partition=ff.partition_, decode=ff._decode)
+    np.testing.assert_array_equal(server.serve(xte), ff.predict(xte))
+
+
+# ------------------------------------------------------------- the server
+def test_server_compile_once_across_buckets(cls_forest):
+    """>= 3 buckets serve after warmup with zero recompilation, and every
+    batch size routes to the right bucket."""
+    ff, xte = cls_forest
+    server = ForestServer.from_forest(ff, buckets=(8, 32, 128))
+    server.warmup()
+    assert server.compile_count == 3
+    want = ff.predict(xte)
+    for n in (3, 8, 20, 32, 97, 128, 60, 5):                 # hits all buckets
+        got = server.serve(xte[:n])
+        np.testing.assert_array_equal(got, want[:n])
+    assert server.compile_count == 3                         # no recompiles
+    buckets_used = {w["bucket"] for w in server.wave_stats}
+    assert buckets_used == {8, 32, 128}
+    stats = server.stats_summary()
+    assert stats["waves"] == 8 and stats["rows_per_s"] > 0
+
+
+def test_server_micro_batches_oversized_requests(cls_forest):
+    """Requests above the largest bucket run as waves of that bucket."""
+    ff, xte = cls_forest
+    server = ForestServer.from_forest(ff, buckets=(16, 64))
+    n = len(xte)                                             # 200 > 64
+    got = server.serve(xte)
+    np.testing.assert_array_equal(got, ff.predict(xte))
+    # 200 rows -> three 64-row waves + one 8-row tail (16-bucket): exactly
+    # the two bucket executables, nothing per-request
+    assert server.compile_count == 2
+    assert sum(w["n_rows"] for w in server.wave_stats) == n
+    assert [w["bucket"] for w in server.wave_stats] == [64, 64, 64, 16]
+
+
+def test_server_dense_equals_compact(cls_forest):
+    ff, xte = cls_forest
+    dense = ForestServer.from_forest(ff, compact=False, buckets=(64,))
+    compact = ForestServer.from_forest(ff, compact=True, buckets=(64,))
+    np.testing.assert_array_equal(dense.serve(xte), compact.serve(xte))
+    # and the compact psum payload is strictly smaller
+    assert (compact.wave_stats[-1]["comm_bytes"]
+            < dense.wave_stats[-1]["comm_bytes"])
+
+
+def test_server_sharded_mode_single_device(cls_forest):
+    """run_sharded execution (shard_map over a (trees, parties) mesh with
+    the aggregate=False hook) — a 1x1 host mesh serving a 1-party forest
+    matches the estimator, and stays compile-once."""
+    from repro.data import make_classification
+    from repro.launch import mesh as mesh_mod
+    x, y = make_classification(400, 12, 2, seed=21)
+    p = ForestParams(n_estimators=3, max_depth=5, n_bins=16, seed=22)
+    ff = fit_federated_forest(x[:300], y[:300], 1, p)
+    mesh = mesh_mod.make_host_mesh(1, axes=("trees", "parties"), shape=(1, 1))
+    server = ForestServer.from_forest(ff, mesh=mesh, buckets=(32, 64))
+    server.warmup()
+    np.testing.assert_array_equal(server.serve(x[300:]), ff.predict(x[300:]))
+    assert server.compile_count == 2
+
+
+def test_server_regression_task(reg_forest):
+    ff, xte = reg_forest
+    server = ForestServer.from_forest(ff, buckets=(32, 128))
+    np.testing.assert_array_equal(server.serve(xte), ff.predict(xte))
+
+
+def test_server_empty_batch(cls_forest):
+    """A zero-row request is ordinary traffic: empty output, no wave."""
+    ff, xte = cls_forest
+    server = ForestServer.from_forest(ff, buckets=(32,))
+    out = server.serve(xte[:0])
+    assert out.shape == (0,)
+    assert len(server.wave_stats) == 0
+
+
+# -------------------------------------------------------------- the queue
+def test_queue_coalesces_and_scatters(cls_forest):
+    """Requests of mixed sizes share waves; each gets its own rows back."""
+    ff, xte = cls_forest
+    server = ForestServer.from_forest(ff, buckets=(64,))
+    queue = RequestQueue(server, max_wave_rows=64)
+    want = ff.predict(xte)
+    sizes, rids, lo = [5, 50, 90, 1, 17], [], 0
+    spans = []
+    for s in sizes:
+        rids.append(queue.submit(xte[lo:lo + s]))
+        spans.append((lo, s))
+        lo += s
+    results = queue.drain()
+    assert set(results) == set(rids)
+    for rid, (start, s) in zip(rids, spans):
+        np.testing.assert_array_equal(results[rid], want[start:start + s])
+    assert len(queue.request_stats) == len(sizes)
+    # 163 rows through 64-row waves -> at most ceil(163/64)+fragmentation
+    assert len(server.wave_stats) <= 5
+
+
+def test_queue_zero_row_request_does_not_wedge(cls_forest):
+    """A zero-row request retires cleanly and later requests still serve."""
+    ff, xte = cls_forest
+    server = ForestServer.from_forest(ff, buckets=(32,))
+    queue = RequestQueue(server)
+    r0 = queue.submit(xte[:0])
+    r1 = queue.submit(xte[:7])
+    results = queue.drain()
+    assert results[r0].shape == (0,)
+    np.testing.assert_array_equal(results[r1], ff.predict(xte[:7]))
+    # drained queue serves follow-up traffic too
+    r2 = queue.submit(xte[7:12])
+    np.testing.assert_array_equal(queue.drain()[r2], ff.predict(xte[7:12]))
