@@ -5,6 +5,10 @@ domain improves accuracy while prediction cost stays flat (the paper's
 scale-free one-round predictor).  Also demonstrates regression mode and the
 classical-prediction comparison.
 
+The scaling/regression sections go through the Federation session API; the
+prediction-protocol section deliberately stays on the legacy
+``fit_federated_forest`` entrypoint to exercise the compatibility shims.
+
 Run:  PYTHONPATH=src python examples/multiparty_forest.py
 """
 import time
@@ -15,6 +19,7 @@ from repro.core import ForestParams, fit_federated_forest
 from repro.data import make_classification, make_regression
 from repro.data.metrics import accuracy, rmse
 from repro.data.tabular import train_test_split
+from repro.federation import Federation
 
 
 def classification_scaling() -> None:
@@ -24,11 +29,13 @@ def classification_scaling() -> None:
     p = ForestParams(n_estimators=12, max_depth=7, n_bins=16, seed=0)
     for m in (1, 2, 4, 8):
         f_use = m * 16
+        fed = Federation(parties=m, n_bins=p.n_bins)
+        fed.ingest(xtr[:, :f_use], ytr)
         t0 = time.perf_counter()
-        ff = fit_federated_forest(xtr[:, :f_use], ytr, m, p)
+        model = fed.fit(p)
         t_tr = time.perf_counter() - t0
         t0 = time.perf_counter()
-        acc = accuracy(yte, ff.predict(xte[:, :f_use]))
+        acc = accuracy(yte, fed.predict(model, xte[:, :f_use]))
         t_pr = time.perf_counter() - t0
         print(f"  M={m}: acc={acc:.3f} train={t_tr:.2f}s predict={t_pr:.3f}s")
 
@@ -39,16 +46,19 @@ def regression_mode() -> None:
     xtr, ytr, xte, yte = train_test_split(x, y, 0.25, seed=3)
     p = ForestParams(task="regression", n_estimators=12, max_depth=7,
                      n_bins=32, seed=1)
-    fed = fit_federated_forest(xtr, ytr, 4, p)
-    cen = fit_federated_forest(xtr, ytr, 1, p)
-    print(f"  federated M=4: rmse={rmse(yte, fed.predict(xte)):.4f}")
-    print(f"  centralized : rmse={rmse(yte, cen.predict(xte)):.4f}")
-    print(f"  identical predictions: "
-          f"{np.allclose(fed.predict(xte), cen.predict(xte), atol=1e-5)}")
+    fed4, fed1 = Federation(parties=4), Federation(parties=1)
+    fed4.ingest(xtr, ytr)
+    fed1.ingest(xtr, ytr)
+    fed_m, cen = fed4.fit(p), fed1.fit(p)
+    pf, pc = fed4.predict(fed_m, xte), fed1.predict(cen, xte)
+    print(f"  federated M=4: rmse={rmse(yte, pf):.4f}")
+    print(f"  centralized : rmse={rmse(yte, pc):.4f}")
+    print(f"  identical predictions: {np.allclose(pf, pc, atol=1e-5)}")
 
 
 def prediction_protocols() -> None:
-    print("== one-round vs classical prediction ==")
+    """Legacy-path section: the pre-session constructors must keep working."""
+    print("== one-round vs classical prediction (legacy entrypoint) ==")
     x, y = make_classification(3000, 30, 2, seed=11)
     xtr, ytr, xte, _ = train_test_split(x, y, 0.3, seed=4)
     p = ForestParams(n_estimators=16, max_depth=8, n_bins=16, seed=2)

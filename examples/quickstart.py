@@ -2,17 +2,19 @@
 
 A bank (11 features) and an e-commerce company (84 features) — the paper's
 target-marketing scenario — share customers but cannot pool raw data.
-They align hashed IDs, train a forest where no raw feature ever leaves its
-owner, and predict with ONE round of communication for the whole forest.
+They align hashed IDs, join a Federation session, train a forest where no
+raw feature ever leaves its owner, and predict with ONE round of
+communication for the whole forest.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import ForestParams, FederatedForest, crypto, party
+from repro.core import ForestParams, crypto
 from repro.data import make_classification
 from repro.data.metrics import accuracy, f1_binary
 from repro.data.tabular import train_test_split
+from repro.federation import Federation
 
 
 def main() -> None:
@@ -29,26 +31,32 @@ def main() -> None:
     ia, ib = crypto.align_ids(bank_ids, ecom_ids)
     print(f"aligned {len(ia)} customers via hashed IDs")
 
-    # --- vertical partition + federated training -------------------------
+    # --- the federation session: ingest -> fit -> predict ----------------
     params = ForestParams(task="classification", n_estimators=20, max_depth=8,
                           n_bins=32, seed=42)
-    partition = party.make_vertical_partition(xtr, 2, params.n_bins)
-    ff = FederatedForest(params).fit(partition, ytr)
+    fed = Federation(parties=2, n_bins=params.n_bins)
+    fed.ingest(xtr, ytr)                  # vertical partition across M=2
+    model = fed.fit(params)
 
-    pred = ff.predict(xte)                # ONE collective for the forest
+    pred = fed.predict(model, xte)        # ONE collective for the forest
     print(f"federated forest:  acc={accuracy(yte, pred):.3f}  "
           f"f1={f1_binary(yte, pred):.3f}")
 
     # --- what each party could do alone (paper's RF1/RF2) ----------------
-    from repro.core import fit_federated_forest
     for name, cols in (("bank alone", bank_cols), ("e-com alone", ecom_cols)):
-        solo = fit_federated_forest(xtr[:, cols], ytr, 1, params)
-        print(f"{name:12s}:  acc={accuracy(yte, solo.predict(xte[:, cols])):.3f}")
+        solo_fed = Federation(parties=1, n_bins=params.n_bins)
+        solo_fed.ingest(xtr[:, cols], ytr)
+        solo = solo_fed.fit(params)
+        print(f"{name:12s}:  acc="
+              f"{accuracy(yte, solo_fed.predict(solo, xte[:, cols])):.3f}")
 
     # --- the losslessness guarantee --------------------------------------
-    central = fit_federated_forest(xtr, ytr, 1, params)
-    same = np.array_equal(central.predict(xte), pred)
+    central_fed = Federation(parties=1, n_bins=params.n_bins)
+    central_fed.ingest(xtr, ytr)
+    central = central_fed.fit(params)
+    same = np.array_equal(central_fed.predict(central, xte), pred)
     print(f"centralized forest == federated forest: {same}")
+    assert same, "losslessness violated"
 
 
 if __name__ == "__main__":

@@ -1,4 +1,6 @@
 """Federated Forest core — the paper's contribution as a composable JAX module."""
+from repro.core.boosting import BoostParams, FederatedBoosting  # noqa: F401
+from repro.core.fedlinear import FederatedLinear, LinearParams  # noqa: F401
 from repro.core.forest import FederatedForest, fit_federated_forest  # noqa: F401
 from repro.core.party import VerticalPartition, make_vertical_partition  # noqa: F401
 from repro.core.types import ForestParams, PARTY_AXIS  # noqa: F401

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import prediction, protocol, tree
+from typing import Any
+
 from repro.core.party import VerticalPartition
 from repro.core.types import ForestParams
 
@@ -52,10 +53,17 @@ class BoostParams:
 @dataclasses.dataclass
 class FederatedBoosting:
     params: BoostParams
+    # execution substrate (federation.substrate); None -> vmap simulation
+    substrate: Any = None
     trees_: list = dataclasses.field(default_factory=list)   # PartyTree per round
     base_: float = 0.0
 
+    def _sub(self):
+        from repro.federation.substrate import default_substrate
+        return default_substrate(self.substrate)
+
     def fit(self, partition: VerticalPartition, y: np.ndarray):
+        from repro.federation import programs
         p = self.params
         tp = p.tree_params()
         y = np.asarray(y, np.float64)
@@ -71,28 +79,31 @@ class FederatedBoosting:
         xb = jnp.asarray(partition.xb)
         gid = jnp.asarray(partition.feat_gid)
         sel = jnp.ones((1, partition.n_features), bool)
-        fit_fn = tree.fit_spmd(tp)
-        run = protocol.jit_simulated(fit_fn, n_party=2, n_shared=3)
-        self._pred_run = protocol.jit_simulated(
-            lambda t_, x_: prediction.forest_predict_oneround(t_, x_, tp),
-            n_party=2, n_shared=0)
+        # one tree per round: never shard the T=1 args over a "trees" axis
+        sub = self._sub()
+        run = jax.jit(programs.forest_fit_program(sub, tp,
+                                                  tree_sharded=False))
+        self._pred_run = jax.jit(programs.forest_predict_program(
+            sub, tp, tree_sharded=False))
 
-        for _ in range(p.n_rounds):
-            g, h = self._grad_hess(y, f_cur)
-            # regression channels on the Newton pseudo-target: w = h,
-            # y_pseudo = -g/h  =>  leaf mean = -G/H (ridge folded via +λ
-            # pseudo-observations at 0 is approximated by reg_lambda in h)
-            hh = h + p.reg_lambda / max(n, 1)
-            pseudo = -g / hh
-            stats = jnp.stack([jnp.asarray(hh, jnp.float32),
-                               jnp.asarray(hh * pseudo, jnp.float32),
-                               jnp.asarray(hh * pseudo * pseudo, jnp.float32)],
-                              axis=-1)
-            w = jnp.ones((1, n), jnp.float32)
-            trees = run(xb, gid, sel, w, stats)
-            self.trees_.append(trees)
-            step = np.asarray(self._pred_run(trees, xb)[0])  # party-0 view
-            f_cur = f_cur + p.learning_rate * step
+        with sub.context():
+            for _ in range(p.n_rounds):
+                g, h = self._grad_hess(y, f_cur)
+                # regression channels on the Newton pseudo-target: w = h,
+                # y_pseudo = -g/h  =>  leaf mean = -G/H (ridge folded via +λ
+                # pseudo-observations at 0 is approximated by reg_lambda in h)
+                hh = h + p.reg_lambda / max(n, 1)
+                pseudo = -g / hh
+                stats = jnp.stack(
+                    [jnp.asarray(hh, jnp.float32),
+                     jnp.asarray(hh * pseudo, jnp.float32),
+                     jnp.asarray(hh * pseudo * pseudo, jnp.float32)],
+                    axis=-1)
+                w = jnp.ones((1, n), jnp.float32)
+                trees = run(xb, gid, sel, w, stats)
+                self.trees_.append(trees)
+                step = programs.party0(self._pred_run(trees, xb))
+                f_cur = f_cur + p.learning_rate * step
         self._partition = partition
         return self
 
@@ -103,11 +114,13 @@ class FederatedBoosting:
         return f - y, np.ones_like(y)
 
     def decision_function(self, x_test: np.ndarray) -> np.ndarray:
+        from repro.federation import programs
         xb = jnp.asarray(self._partition.bin_test(np.asarray(x_test)))
         f = np.full(x_test.shape[0], self.base_)
-        for trees in self.trees_:
-            f = f + self.params.learning_rate * np.asarray(
-                self._pred_run(trees, xb)[0])
+        with self._sub().context():
+            for trees in self.trees_:
+                f = f + self.params.learning_rate * programs.party0(
+                    self._pred_run(trees, xb))
         return f
 
     def predict(self, x_test: np.ndarray) -> np.ndarray:

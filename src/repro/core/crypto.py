@@ -44,17 +44,34 @@ def encode_labels(y: np.ndarray, n_classes: int, seed: int = 0):
     """Permute class ids: clients train on encoded labels (classification is
     invariant); only the label owner can decode. Returns (y_enc, decode)."""
     perm = np.random.default_rng(seed).permutation(n_classes)
-    inv = np.argsort(perm)
-    return perm[y.astype(np.int64)], lambda y_enc: inv[np.asarray(y_enc, dtype=np.int64)]
+    return perm[y.astype(np.int64)], label_decoder(n_classes, seed)
+
+
+def label_decoder(n_classes: int, seed: int = 0):
+    """Reconstruct encode_labels' decode from (n_classes, seed) alone — the
+    label owner can decode a checkpoint-restored forest without the original
+    training labels in memory (Federation.load relies on this)."""
+    inv = np.argsort(np.random.default_rng(seed).permutation(n_classes))
+    return lambda y_enc: inv[np.asarray(y_enc, dtype=np.int64)]
 
 
 def mask_regression_targets(y: np.ndarray, seed: int = 0):
     """Affine mask a*y + b (a>0): SSE split gains scale by a^2, so the argmax
     split — hence the tree — is unchanged; leaf values decode affinely."""
+    a, b = _regression_mask(seed)
+    return a * y + b, regression_unmasker(seed)
+
+
+def _regression_mask(seed: int) -> tuple[float, float]:
     rng = np.random.default_rng(seed)
-    a = float(rng.uniform(0.5, 2.0))
-    b = float(rng.normal())
-    return a * y + b, lambda p: (np.asarray(p) - b) / a
+    return float(rng.uniform(0.5, 2.0)), float(rng.normal())
+
+
+def regression_unmasker(seed: int = 0):
+    """Reconstruct mask_regression_targets' decode from the seed alone
+    (Federation.load, same role as label_decoder for classification)."""
+    a, b = _regression_mask(seed)
+    return lambda p: (np.asarray(p) - b) / a
 
 
 def encode_feature_names(names: list[str], seed: int = 0) -> dict[str, int]:

@@ -8,17 +8,29 @@ party axis per step, gradients computed locally per block.  This is the
 masked rather than encrypted).
 
 SPMD over PARTY_AXIS like the forest — runs under vmap (simulation) and
-shard_map (mesh) unchanged.
+shard_map (mesh) unchanged; execution goes through a federation Substrate
+so the session API drives F-LR exactly like the tree models.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.party import VerticalPartition
 from repro.core.types import PARTY_AXIS
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearParams:
+    """Spec for Federation.fit dispatch — mirrors FederatedLinear's knobs."""
+    task: str = "classification"
+    lr: float = 0.5
+    steps: int = 400
+    l2: float = 1e-4
 
 
 def _spmd_fit(x_i, y, *, task: str, lr: float, steps: int, l2: float):
@@ -50,32 +62,74 @@ def _spmd_predict(x_i, w, b, *, task: str):
 
 @dataclasses.dataclass
 class FederatedLinear:
-    """F-LR: logistic (classification) or linear (regression) regression."""
+    """F-LR: logistic (classification) or linear (regression) regression.
+
+    Conforms to the federation Estimator protocol: ``fit``/``predict``
+    accept either per-party raw feature blocks (the legacy surface) or a
+    VerticalPartition carrying ``raw_parts`` — the session path.
+    """
     task: str = "classification"
     lr: float = 0.5
     steps: int = 400
     l2: float = 1e-4
+    # execution substrate (federation.substrate); None -> vmap simulation
+    substrate: Any = None
 
-    def fit(self, x_parts: list[np.ndarray], y: np.ndarray):
-        """x_parts: per-party raw feature blocks (same N, varying F_i)."""
+    @classmethod
+    def from_params(cls, params: LinearParams, substrate=None,
+                    **kw) -> "FederatedLinear":
+        return cls(task=params.task, lr=params.lr, steps=params.steps,
+                   l2=params.l2, substrate=substrate, **kw)
+
+    def _sub(self):
+        from repro.federation.substrate import default_substrate
+        return default_substrate(self.substrate)
+
+    def _blocks(self, x) -> list[np.ndarray]:
+        """Per-party raw feature blocks from any accepted input form."""
+        if isinstance(x, VerticalPartition):
+            if x.raw_parts is None:
+                raise ValueError(
+                    "this VerticalPartition carries no raw feature blocks "
+                    "(built before make_vertical_partition kept them?)")
+            self._partition = x
+            return x.raw_parts
+        if isinstance(x, np.ndarray) and x.ndim == 2:
+            part = getattr(self, "_partition", None)
+            if part is None:
+                raise ValueError("raw-matrix input needs a partition: fit "
+                                 "with a VerticalPartition first")
+            return part.split_raw(x)
+        return [np.asarray(b) for b in x]
+
+    def fit(self, x_parts, y: np.ndarray):
+        """x_parts: per-party raw blocks (same N, varying F_i), or a
+        VerticalPartition with raw_parts."""
+        x_parts = self._blocks(x_parts)
         self._mu = [p.mean(0) for p in x_parts]
         self._sd = [p.std(0) + 1e-8 for p in x_parts]
         xs = self._stack([(p - m) / s for p, m, s
                           in zip(x_parts, self._mu, self._sd)])
         fn = lambda xi, yy: _spmd_fit(xi, yy, task=self.task, lr=self.lr,
                                       steps=self.steps, l2=self.l2)
-        self._w, self._b = jax.jit(
-            jax.vmap(fn, in_axes=(0, None), axis_name=PARTY_AXIS)
-        )(jnp.asarray(xs), jnp.asarray(y))
+        sub = self._sub()
+        with sub.context():
+            self._w, self._b = sub.jit(fn, 1, 1)(jnp.asarray(xs),
+                                                 jnp.asarray(y))
         return self
 
-    def predict(self, x_parts: list[np.ndarray]) -> np.ndarray:
+    def predict(self, x_parts) -> np.ndarray:
+        from repro.federation import programs
+        x_parts = self._blocks(x_parts)
         xs = self._stack([(p - m) / s for p, m, s
                           in zip(x_parts, self._mu, self._sd)])
         fn = lambda xi, w, b: _spmd_predict(xi, w, b, task=self.task)
-        out = jax.vmap(fn, in_axes=(0, 0, None), axis_name=PARTY_AXIS)(
-            jnp.asarray(xs), self._w, self._b[0] if self._b.ndim else self._b)
-        return np.asarray(out[0])
+        sub = self._sub()
+        with sub.context():
+            out = sub.jit(fn, 2, 1)(
+                jnp.asarray(xs), self._w,
+                self._b[0] if self._b.ndim else self._b)
+        return programs.party0(out)
 
     @staticmethod
     def _stack(parts: list[np.ndarray]) -> np.ndarray:

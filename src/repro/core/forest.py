@@ -2,7 +2,10 @@
 
 Orchestrates: master-side randomness (bootstrap weights + per-tree feature
 subsets, paper Alg. 2 lines 3–4), label encoding (crypto.py), the SPMD
-builder (tree.py) and the one-round predictor (prediction.py).
+builder (tree.py) and the one-round predictor (prediction.py).  Execution
+goes through a federation Substrate (vmap simulation by default; a session
+can bind a sharded mesh instead) — the programs themselves live in
+repro.federation.programs.
 
 The centralized baseline ("NonFF") is *the same code* with M = 1 — that is the
 strongest possible form of the paper's losslessness claim, and it's what the
@@ -11,14 +14,14 @@ tests assert bit-identically.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable
+import warnings
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import crypto, impurity, prediction, protocol, tree
+from repro.core import crypto, impurity, tree
 from repro.core.party import VerticalPartition, make_vertical_partition
 from repro.core.types import ForestParams
 
@@ -34,17 +37,32 @@ class FederatedForest:
     # ("there will be a trade-off between the security protection and the
     # computational efficiency").
     mask_regression: bool = False
-    # histogram backend override; None defers to params.hist_impl ("auto"
-    # resolves per host in kernels.ops — scatter on CPU/GPU, Pallas on TPU)
+    # DEPRECATED: per-estimator histogram override.  The backend choice is
+    # session-level now — set Federation(hist_impl=...) or params.hist_impl.
     hist_impl: str | None = None
+    # execution substrate (federation.substrate); None -> vmap simulation
+    substrate: Any = None
 
     # fitted state
     trees_: tree.PartyTree | None = None      # leading axes (M, T, ...)
     partition_: VerticalPartition | None = None
     _decode: Callable | None = None
 
+    def __post_init__(self) -> None:
+        if self.hist_impl is not None:
+            warnings.warn(
+                "FederatedForest(hist_impl=...) is deprecated: the histogram "
+                "backend is owned by the session (Federation(hist_impl=...)) "
+                "or by ForestParams.hist_impl",
+                DeprecationWarning, stacklevel=3)
+
+    def _sub(self):
+        from repro.federation.substrate import default_substrate
+        return default_substrate(self.substrate)
+
     # ------------------------------------------------------------------ fit
     def fit(self, partition: VerticalPartition, y: np.ndarray) -> "FederatedForest":
+        from repro.federation import programs
         p = self.params
         if partition.xb.shape[2] == 0:
             raise ValueError("empty feature space")
@@ -59,11 +77,12 @@ class FederatedForest:
         y_stats = impurity.stat_channels(jnp.asarray(y_enc), p.task, p.n_classes)
         weights, feat_sels = self._master_randomness(partition)
 
-        fit_fn = tree.fit_spmd(p, self.hist_impl)
-        run = protocol.jit_simulated(fit_fn, n_party=2, n_shared=3)
-        self.trees_ = jax.block_until_ready(run(
-            jnp.asarray(partition.xb), jnp.asarray(partition.feat_gid),
-            jnp.asarray(feat_sels), jnp.asarray(weights), y_stats))
+        run = jax.jit(programs.forest_fit_program(self._sub(), p,
+                                                  self.hist_impl))
+        with self._sub().context():
+            self.trees_ = jax.block_until_ready(run(
+                jnp.asarray(partition.xb), jnp.asarray(partition.feat_gid),
+                jnp.asarray(feat_sels), jnp.asarray(weights), y_stats))
         self.partition_ = partition
         return self
 
@@ -85,22 +104,26 @@ class FederatedForest:
         return weights.astype(np.float32), feat_sels
 
     # -------------------------------------------------------------- predict
-    def _predict_common(self, x_test: np.ndarray, fn) -> np.ndarray:
+    def _run_predict(self, x_test: np.ndarray, program, *shared) -> np.ndarray:
+        from repro.federation import programs
         assert self.trees_ is not None, "fit first"
         xb_parts = self.partition_.bin_test(np.asarray(x_test))
-        pred_fn = functools.partial(fn, params=self.params)
-        run = protocol.jit_simulated(pred_fn, n_party=2, n_shared=0)
-        out = np.asarray(run(self.trees_, jnp.asarray(xb_parts))[0])
-        return self._decode(out) if self.params.task == "classification" else (
-            self._decode(out))
+        with self._sub().context():
+            out = jax.jit(program)(self.trees_, jnp.asarray(xb_parts), *shared)
+        return self._decode(programs.party0(out))
 
     def predict(self, x_test: np.ndarray) -> np.ndarray:
         """One-round prediction (the paper's algorithm)."""
-        return self._predict_common(x_test, prediction.forest_predict_oneround)
+        from repro.federation import programs
+        return self._run_predict(
+            x_test, programs.forest_predict_program(self._sub(), self.params))
 
     def predict_classical(self, x_test: np.ndarray) -> np.ndarray:
         """Multi-round baseline (paper's comparison in Figs. 4–6)."""
-        return self._predict_common(x_test, prediction.forest_predict_classical)
+        from repro.federation import programs
+        return self._run_predict(
+            x_test,
+            programs.forest_predict_classical_program(self._sub(), self.params))
 
     def leaf_table(self, pad_multiple: int = 8):
         """Live-leaf compaction plan of the fitted forest (serving/plan.py)."""
@@ -116,18 +139,14 @@ class FederatedForest:
         Bit-identical to :meth:`predict` (Prop. 1 is unchanged; only dead
         heap columns are dropped from the psum and the vote) — the serving
         engine's kernel, exposed here for parity tests and ad-hoc use."""
+        from repro.federation import programs
         assert self.trees_ is not None, "fit first"
         lt = leaf_table if leaf_table is not None else self.leaf_table()
-        xb_parts = self.partition_.bin_test(np.asarray(x_test))
-
-        def pred_fn(trees, xbt, leaf_idx):
-            return prediction.forest_predict_oneround(
-                trees, xbt, self.params, leaf_idx=leaf_idx)
-
-        run = protocol.jit_simulated(pred_fn, n_party=2, n_shared=1)
-        out = np.asarray(run(self.trees_, jnp.asarray(xb_parts),
-                             lt.leaf_idx)[0])
-        return self._decode(out)
+        return self._run_predict(
+            x_test,
+            programs.forest_predict_program(self._sub(), self.params,
+                                            compact=True),
+            lt.leaf_idx)
 
     # ------------------------------------------------- break-point recovery
     def fit_resumable(self, partition: VerticalPartition, y: np.ndarray,
@@ -148,8 +167,9 @@ class FederatedForest:
         y_stats = impurity.stat_channels(jnp.asarray(y_enc), p.task, p.n_classes)
         weights, feat_sels = self._master_randomness(partition)
 
-        fit_fn = tree.fit_spmd(p, self.hist_impl)
-        run = protocol.jit_simulated(fit_fn, n_party=2, n_shared=3)
+        from repro.federation import programs
+        run = jax.jit(programs.forest_fit_program(self._sub(), p,
+                                                  self.hist_impl))
         chunks: list = []
         done = ckpt.latest_step(ckpt_dir)
         start = 0

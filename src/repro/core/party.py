@@ -27,12 +27,16 @@ class VerticalPartition:
       boundaries: (F, n_bins-1) float64 — per-feature bin boundaries (kept by
                   the owning party only in a real deployment; stored centrally
                   here for test-time re-binning).
+      raw_parts:  optional per-party raw (unbinned) feature blocks — what a
+                  party actually holds locally.  Linear models (fedlinear.py)
+                  train on these; tree models only ever see ``xb``.
     """
 
     xb: np.ndarray
     feat_gid: np.ndarray
     n_features: int
     boundaries: np.ndarray
+    raw_parts: list[np.ndarray] | None = None
 
     @property
     def n_parties(self) -> int:
@@ -42,10 +46,23 @@ class VerticalPartition:
     def n_samples(self) -> int:
         return int(self.xb.shape[1])
 
+    @property
+    def n_bins(self) -> int:
+        """Bin count this partition was quantized with (boundaries are the
+        n_bins-1 inner edges)."""
+        return int(self.boundaries.shape[1]) + 1
+
     def bin_test(self, x_test: np.ndarray) -> np.ndarray:
         """Bin a raw test matrix (N_t, F) and partition it like training data."""
         xb = binning.apply_bins(x_test, self.boundaries)
         return _partition_binned(xb, self.feat_gid)
+
+    def split_raw(self, x: np.ndarray) -> list[np.ndarray]:
+        """Split a raw (N, F) matrix into per-party column blocks, matching
+        the feature assignment of this partition (no binning)."""
+        x = np.asarray(x)
+        return [x[:, self.feat_gid[i][self.feat_gid[i] >= 0]]
+                for i in range(self.n_parties)]
 
 
 def assign_features(n_features: int, n_parties: int, *, contiguous: bool = True,
@@ -73,7 +90,8 @@ def make_vertical_partition(x: np.ndarray, n_parties: int, n_bins: int, *,
     feat_gid = _pad_groups(groups)
     return VerticalPartition(xb=_partition_binned(xb, feat_gid),
                              feat_gid=feat_gid, n_features=x.shape[1],
-                             boundaries=boundaries)
+                             boundaries=boundaries,
+                             raw_parts=[np.asarray(x[:, g]) for g in groups])
 
 
 def _pad_groups(groups: list[np.ndarray]) -> np.ndarray:

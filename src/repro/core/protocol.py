@@ -36,6 +36,45 @@ def jit_simulated(fn: Callable[..., Any], n_party: int, n_shared: int,
     return wrapped
 
 
+def sharded_program(fn: Callable[..., Any], mesh: Mesh, n_party: int,
+                    n_shared: int, shared_specs=None, out_specs=None):
+    """shard_map ``fn`` over the mesh axis named ``PARTY_AXIS``.
+
+    Party args shard their leading M axis one-party-per-shard (the axis size
+    must equal M); inside the mapped body the local size-1 party dim is
+    squeezed so ``fn`` sees exactly what it sees under ``run_simulated``, and
+    re-expanded on the way out.  ``shared_specs`` places the shared args
+    (default: replicated); ``out_specs`` defaults to party-stacked outputs.
+    Returns the un-jitted program — callers jit/lower it (the AOT serving
+    path) or wrap it in ``run_sharded`` for eager use.
+    """
+    from repro import compat  # local: compat imports nothing from core
+
+    shared_specs = tuple(shared_specs) if shared_specs is not None else \
+        (P(),) * n_shared
+    if len(shared_specs) != n_shared:
+        raise ValueError(f"{n_shared} shared args, {len(shared_specs)} specs")
+    in_specs = (P(PARTY_AXIS),) * n_party + shared_specs
+    out_specs = P(PARTY_AXIS) if out_specs is None else out_specs
+
+    def local(*args):
+        party = [jax.tree.map(lambda a: a[0], a) for a in args[:n_party]]
+        out = fn(*party, *args[n_party:])
+        return jax.tree.map(lambda a: a[None], out)
+
+    return compat.shard_map(local, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_vma=False)
+
+
+def run_sharded(fn: Callable[..., Any], party_args: tuple,
+                shared_args: tuple = (), *, mesh: Mesh,
+                shared_specs=None, out_specs=None):
+    """Run ``fn`` SPMD over the mesh's "parties" axis (see sharded_program)."""
+    prog = sharded_program(fn, mesh, len(party_args), len(shared_args),
+                           shared_specs=shared_specs, out_specs=out_specs)
+    return prog(*party_args, *shared_args)
+
+
 def replicate_to_mesh(x, mesh: Mesh):
     """Device-put a host array replicated over every mesh axis."""
     return jax.device_put(x, NamedSharding(mesh, P()))

@@ -1,0 +1,24 @@
+"""Unified Federation session API — one substrate-aware entrypoint for the
+whole federated lifecycle (fit / predict / serve / checkpoint).
+
+    from repro.federation import Federation
+    fed = Federation(parties=4)
+    fed.ingest(x_train, y_train)
+    model = fed.fit(ForestParams(n_estimators=20, max_depth=8))
+    preds = fed.predict(model, x_test)
+    server = fed.serve(model)
+
+Layers:
+  * ``substrate``  — Substrate protocol (SimulatedSubstrate vmap /
+    ShardedSubstrate shard_map) wrapping core/protocol.{run_simulated,
+    run_sharded}; resolved once per session.
+  * ``programs``   — substrate-specialized fit/predict closures shared by
+    the session, the serving engine, and the dry-run hillclimb.
+  * ``estimator``  — the Estimator protocol every model family conforms to
+    (forest, boosting, F-LR).
+  * ``session``    — the Federation object that owns all of the above.
+"""
+from repro.federation.estimator import Estimator, FittedModel  # noqa: F401
+from repro.federation.session import Federation  # noqa: F401
+from repro.federation.substrate import (Substrate, SimulatedSubstrate,  # noqa: F401
+                                        ShardedSubstrate, resolve_substrate)

@@ -1,0 +1,34 @@
+"""The shared Estimator protocol every federated model conforms to.
+
+``Federation.fit`` returns a *fitted model handle* — the estimator instance
+itself, carrying its learned state (``trees_`` for forests, per-round trees
+for boosting, weight blocks for F-LR).  All of them speak the same minimal
+surface, so session code (and user code) never branches on model family:
+
+  * ``fit(partition, y)``  — train on a VerticalPartition (core/party.py);
+    returns self.
+  * ``predict(x_test)``    — predict raw feature rows (N_t, F); the model
+    re-bins / re-splits through the partition it was fitted with.
+
+Conformance is asserted in tests/test_federation.py for
+FederatedForest, FederatedBoosting, and FederatedLinear.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class Estimator(Protocol):
+    """Minimal train/infer surface of a federated model."""
+
+    def fit(self, partition: Any, y: np.ndarray) -> "Estimator": ...
+
+    def predict(self, x_test: np.ndarray) -> np.ndarray: ...
+
+
+# A fitted model handle IS the estimator instance with learned state attached
+# (Federation.fit's return type).
+FittedModel = Estimator

@@ -1,0 +1,286 @@
+"""Federation — the session object that owns the federated lifecycle.
+
+The paper's system is one coordinated protocol: regional clients join a
+session, train jointly (Alg. 2), and answer predictions with one round of
+communication (Alg. 5/6).  This class is that session: it resolves the
+execution substrate exactly once and exposes the whole lifecycle as methods,
+instead of each entrypoint re-wiring vmap/shard_map/mesh/hist-backend by
+hand::
+
+    fed = Federation(parties=4)                 # or substrate="sharded", mesh=...
+    part = fed.ingest(x_train, y_train)         # VerticalPartition
+    model = fed.fit(ForestParams(...))          # FittedModel (Estimator)
+    preds = fed.predict(model, x_test)          # one-round, leaf-compacted
+    server = fed.serve(model, buckets=(32, 256))  # ForestServer on the session mesh
+    fed.save(model, ckpt_dir); model = fed.load(ckpt_dir, params)
+
+``fit`` dispatches on the spec type — ForestParams, BoostParams, or
+LinearParams — and every fitted handle conforms to the shared Estimator
+protocol.  ``predict``/``serve`` cache the LeafTable compaction plan per
+model and rebuild it whenever the model's ``trees_`` changes (e.g. a
+``fit_resumable`` continuation extended the forest), so serving state can
+never go stale against a refreshed model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.party import VerticalPartition, make_vertical_partition
+from repro.core.types import ForestParams
+from repro.federation import programs
+from repro.federation.estimator import Estimator
+from repro.federation.substrate import Substrate, resolve_substrate
+
+
+class Federation:
+    """A federated-learning session: participants + substrate + lifecycle.
+
+    Args:
+      parties: number of participating parties M (the vertical split width).
+      substrate: "simulated" (vmap, single host — default), "sharded"
+        (shard_map over ``mesh``), or a pre-built Substrate.
+      mesh: jax Mesh with a "parties" axis (required for "sharded"); also
+        pre-binds servers built by :meth:`serve`.
+      hist_impl: session-level histogram backend override — the single
+        source of truth, folded into every spec this session fits (None
+        defers to each spec's own ``hist_impl``).
+      n_bins: default quantile-bin count for :meth:`ingest`.
+      seed: default partitioning seed for :meth:`ingest`.
+    """
+
+    def __init__(self, parties: int = 2, substrate: str | Substrate = "simulated",
+                 mesh=None, hist_impl: str | None = None, n_bins: int = 32,
+                 seed: int = 0):
+        self.parties = int(parties)
+        self.mesh = mesh
+        self.hist_impl = hist_impl
+        self.n_bins = int(n_bins)
+        self.seed = int(seed)
+        self.substrate = resolve_substrate(substrate, mesh,
+                                           parties=self.parties)
+        self._partition: VerticalPartition | None = None
+        self._y: np.ndarray | None = None
+        # id(model) -> (model, trees_ ref, LeafTable): the plan is valid
+        # exactly while the model still holds that PartyTree stack.  The
+        # strong model ref keeps the id stable (no reuse after gc); sessions
+        # cache one entry per model they've predicted/served, which is the
+        # session's working set by construction.
+        self._plans: dict[int, tuple[Any, Any, Any]] = {}
+        # (id(model), buckets, compact, cls) -> (model, server, trees_ ref)
+        self._servers: dict[tuple, tuple[Any, Any, Any]] = {}
+
+    # ------------------------------------------------------------------ data
+    def ingest(self, x: np.ndarray, y: np.ndarray | None = None, *,
+               n_bins: int | None = None, contiguous: bool = True,
+               seed: int | None = None) -> VerticalPartition:
+        """Vertically partition + bin a raw (N, F) matrix across the
+        session's M parties; remembers (partition, y) as the session's
+        training set so ``fit(spec)`` needs no further arguments."""
+        part = make_vertical_partition(
+            np.asarray(x), self.parties, n_bins or self.n_bins,
+            contiguous=contiguous, seed=self.seed if seed is None else seed)
+        self._partition = part
+        self._y = None if y is None else np.asarray(y)
+        return part
+
+    # ------------------------------------------------------------------- fit
+    def fit(self, spec, partition: VerticalPartition | None = None,
+            y: np.ndarray | None = None, **model_kw) -> Estimator:
+        """Train a model of the family ``spec`` describes on this session's
+        substrate.  ``spec`` is a ForestParams, BoostParams, or LinearParams;
+        the fitted handle conforms to the Estimator protocol."""
+        partition, y = self._training_set(partition, y)
+        self._check_binning(spec, partition)
+        model = self._model_for(self._apply_session(spec), **model_kw)
+        return model.fit(partition, y)
+
+    def fit_resumable(self, spec: ForestParams, ckpt_dir: str, *,
+                      trees_per_chunk: int = 2,
+                      partition: VerticalPartition | None = None,
+                      y: np.ndarray | None = None, **model_kw) -> Estimator:
+        """Break-point-recoverable forest fit (paper §4.1) through the
+        session substrate; chunk checkpoints land in ``ckpt_dir``."""
+        if not isinstance(spec, ForestParams):
+            raise TypeError("fit_resumable is forest-only")
+        partition, y = self._training_set(partition, y)
+        self._check_binning(spec, partition)
+        model = self._model_for(self._apply_session(spec), **model_kw)
+        return model.fit_resumable(partition, y, ckpt_dir,
+                                   trees_per_chunk=trees_per_chunk)
+
+    def _training_set(self, partition, y):
+        partition = partition if partition is not None else self._partition
+        y = y if y is not None else self._y
+        if partition is None or y is None:
+            raise ValueError("no training data: call ingest(x, y) first or "
+                             "pass (partition, y) explicitly")
+        if partition.n_parties != self.parties:
+            raise ValueError(f"partition has {partition.n_parties} parties, "
+                             f"session declares {self.parties}")
+        return partition, y
+
+    @staticmethod
+    def _check_binning(spec, partition):
+        """A spec binned differently from the partition would histogram
+        truncated bin ids and silently train a wrong model — reject it."""
+        spec_bins = getattr(spec, "n_bins", None)
+        if spec_bins is not None and spec_bins != partition.n_bins:
+            raise ValueError(
+                f"spec.n_bins={spec_bins} but the partition was ingested "
+                f"with n_bins={partition.n_bins}; re-ingest with matching "
+                f"bins (Federation(n_bins=...) or ingest(n_bins=...))")
+
+    def _apply_session(self, spec):
+        """Fold session-level settings into a spec (hist_impl is owned here)."""
+        if self.hist_impl is not None and hasattr(spec, "hist_impl") \
+                and dataclasses.is_dataclass(spec):
+            spec = dataclasses.replace(spec, hist_impl=self.hist_impl)
+        return spec
+
+    def _model_for(self, spec, **model_kw) -> Estimator:
+        from repro.core.boosting import BoostParams, FederatedBoosting
+        from repro.core.fedlinear import FederatedLinear, LinearParams
+        from repro.core.forest import FederatedForest
+        if isinstance(spec, ForestParams):
+            return FederatedForest(spec, substrate=self.substrate, **model_kw)
+        if isinstance(spec, BoostParams):
+            return FederatedBoosting(spec, substrate=self.substrate,
+                                     **model_kw)
+        if isinstance(spec, LinearParams):
+            return FederatedLinear.from_params(spec, substrate=self.substrate,
+                                               **model_kw)
+        raise TypeError(f"unknown model spec {type(spec).__name__} "
+                        "(expected ForestParams | BoostParams | LinearParams)")
+
+    # --------------------------------------------------------------- predict
+    def predict(self, model: Estimator, x_test: np.ndarray) -> np.ndarray:
+        """One-round prediction through the session.
+
+        Forests go through the leaf-compacted kernel with a per-model cached
+        LeafTable plan, rebuilt automatically when ``model.trees_`` changed
+        since the plan was made (fit_resumable continuations, refits)."""
+        from repro.core.forest import FederatedForest
+        if isinstance(model, FederatedForest):
+            return model.predict_compact(x_test,
+                                         leaf_table=self._plan_for(model))
+        return model.predict(x_test)
+
+    def _plan_for(self, model):
+        """The model's LeafTable — cached until its trees_ is swapped out."""
+        cached = self._plans.get(id(model))
+        if cached is not None and cached[0] is model \
+                and cached[1] is model.trees_:
+            return cached[2]
+        table = model.leaf_table()
+        self._plans[id(model)] = (model, model.trees_, table)
+        return table
+
+    # ----------------------------------------------------------------- serve
+    def serve(self, model: Estimator, *, buckets=None, compact: bool = True,
+              server_cls=None, **server_kw):
+        """Stand up a ForestServer for ``model``, pre-bound to the session's
+        mesh (sharded substrate -> shard_map serving; simulated -> vmap).
+
+        Repeated calls with the same (model, buckets, compact) return the
+        same server — compiled bucket executables are reused — unless the
+        model's ``trees_`` changed, in which case the server is refreshed
+        in place (LeafTable plan rebuilt, stale executables dropped)."""
+        from repro.serving import engine
+        cls = server_cls or engine.ForestServer
+        buckets = tuple(buckets) if buckets is not None \
+            else engine.DEFAULT_BUCKETS
+        # only the knob-free path is cached: extra server_kw (vote_impl,
+        # mask_dtype, ...) isn't part of the key, and silently returning a
+        # server built with different knobs would drop the request
+        cacheable = not server_kw
+        key = (id(model), buckets, compact, cls)
+        cached = self._servers.get(key) if cacheable else None
+        if cached is not None and cached[0] is model:
+            server, trees_ref = cached[1], cached[2]
+            if trees_ref is not model.trees_:
+                server.refresh(model.trees_)
+                self._servers[key] = (model, server, model.trees_)
+            return server
+        server_kw.setdefault("mesh", self.substrate.mesh)
+        server = cls.from_forest(model, buckets=buckets, compact=compact,
+                                 **server_kw)
+        if cacheable:
+            self._servers[key] = (model, server, model.trees_)
+        return server
+
+    # ------------------------------------------------------------ checkpoint
+    def save(self, model: Estimator, ckpt_dir: str,
+             step: int | None = None) -> str:
+        """Checkpoint a fitted forest's PartyTree stack (ckpt/checkpoint.py).
+        Default step = the stack's tree count."""
+        from repro import ckpt
+        trees = getattr(model, "trees_", None)
+        if trees is None or not hasattr(trees, "is_leaf"):
+            raise TypeError("save() expects a fitted forest model")
+        step = int(trees.is_leaf.shape[1]) if step is None else int(step)
+        return ckpt.save_checkpoint(ckpt_dir, step, trees)
+
+    def load(self, ckpt_dir: str, params: ForestParams, *,
+             step: int | None = None,
+             partition: VerticalPartition | None = None,
+             decode: Callable | None = None, trees=None,
+             **model_kw) -> Estimator:
+        """Rehydrate a fitted forest handle from a checkpoint.
+
+        The label decode is reconstructed from (n_classes, seed) for
+        encrypted-classification forests (crypto.label_decoder), so a loaded
+        model predicts true labels without the original fit in memory.
+        CAVEAT: checkpoints store only the PartyTree stack, not the
+        fit-time privacy flags — a forest trained with the non-default
+        ``encrypt_labels=False`` (or ``mask_regression=True``) MUST be
+        loaded with the same flags in ``model_kw`` (or an explicit
+        ``decode``), exactly as it was constructed for fit; otherwise the
+        reconstructed permutation decode scrambles its labels.
+        ``trees`` accepts an already-loaded stack to avoid a second read."""
+        from repro.core import crypto
+        from repro.core.forest import FederatedForest
+        from repro.serving.engine import load_forest_trees
+        model = FederatedForest(self._apply_session(params),
+                                substrate=self.substrate, **model_kw)
+        model.trees_ = trees if trees is not None \
+            else load_forest_trees(ckpt_dir, step)
+        model.partition_ = partition if partition is not None \
+            else self._partition
+        stack_parties = int(model.trees_.is_leaf.shape[0])
+        if model.partition_ is not None \
+                and model.partition_.n_parties != stack_parties:
+            raise ValueError(
+                f"checkpointed stack has {stack_parties} parties but the "
+                f"attached partition has {model.partition_.n_parties}; pass "
+                f"the partition this forest was fitted with (or none)")
+        if decode is None and params.task == "classification" \
+                and model.encrypt_labels:
+            decode = crypto.label_decoder(params.n_classes, params.seed)
+        elif decode is None and params.task == "regression" \
+                and model.mask_regression:
+            decode = crypto.regression_unmasker(params.seed)
+        model._decode = decode if decode is not None \
+            else (lambda v: np.asarray(v))
+        return model
+
+    # ------------------------------------------- lowerable programs (dry-run)
+    def fit_program(self, spec: ForestParams,
+                    hist_impl: str | None = None) -> Callable:
+        """The substrate-wrapped forest fit closure — jit/lower it against
+        ShapeDtypeStructs for dry-run roofline work (launch/perf.py)."""
+        return programs.forest_fit_program(
+            self.substrate, self._apply_session(spec), hist_impl)
+
+    def predict_program(self, spec: ForestParams, **kw) -> Callable:
+        """The substrate-wrapped one-round predict closure (see
+        programs.forest_predict_program for the knobs)."""
+        return programs.forest_predict_program(
+            self.substrate, self._apply_session(spec), **kw)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return (f"Federation(parties={self.parties}, "
+                f"substrate={self.substrate.name!r}, "
+                f"hist_impl={self.hist_impl!r})")

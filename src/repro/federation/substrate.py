@@ -1,0 +1,140 @@
+"""Execution substrates: where the federated protocol runs.
+
+The protocol bodies (core/tree.py, core/prediction.py, core/fedlinear.py)
+are written once against the ``parties`` axis name; a Substrate decides how
+that axis is realized:
+
+  * ``SimulatedSubstrate`` — vmap on one host (core/protocol.run_simulated).
+    The CPU test/benchmark path; collectives have identical semantics.
+  * ``ShardedSubstrate``   — shard_map over a mesh whose "parties" axis is
+    the protocol axis (core/protocol.run_sharded).  The production / dry-run
+    path: one party per shard, optional "trees" axis for bagging
+    tree-parallelism.
+
+Every lifecycle surface (Federation.fit/predict/serve, ForestServer, the
+launch CLIs) resolves its substrate exactly once through
+``resolve_substrate`` — this module is the single owner of the
+vmap-vs-shard_map wiring that used to be re-implemented per entrypoint.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import protocol
+from repro.core.types import PARTY_AXIS
+
+
+@runtime_checkable
+class Substrate(Protocol):
+    """Where SPMD party programs execute (duck-typed; see the two impls)."""
+
+    name: str
+    mesh: Mesh | None
+
+    def program(self, fn: Callable, n_party: int, n_shared: int, *,
+                shared_specs=None, out_specs=None) -> Callable: ...
+
+    def jit(self, fn: Callable, n_party: int, n_shared: int, **kw) -> Callable: ...
+
+    def context(self): ...
+
+
+class SimulatedSubstrate:
+    """M parties on one host under vmap — semantically the distributed run."""
+
+    name = "simulated"
+    mesh = None
+
+    def program(self, fn: Callable, n_party: int, n_shared: int, *,
+                shared_specs=None, out_specs=None) -> Callable:
+        """Callable over (party_args..., shared_args...); sharding specs are
+        accepted (and ignored) so callers can stay substrate-agnostic."""
+        def run(*args):
+            return protocol.run_simulated(
+                fn, args[:n_party], args[n_party:n_party + n_shared])
+        return run
+
+    def jit(self, fn: Callable, n_party: int, n_shared: int, **kw) -> Callable:
+        return jax.jit(self.program(fn, n_party, n_shared, **kw))
+
+    def context(self):
+        return contextlib.nullcontext()
+
+
+class ShardedSubstrate:
+    """shard_map over a mesh axis literally named "parties" (one party per
+    shard).  A "trees" axis, if present, carries bagging tree-parallelism —
+    forest programs shard their per-tree args/outputs over it."""
+
+    name = "sharded"
+
+    def __init__(self, mesh: Mesh):
+        if PARTY_AXIS not in mesh.axis_names:
+            raise ValueError(
+                f"sharded substrate needs a '{PARTY_AXIS}' mesh axis, got "
+                f"{mesh.axis_names}")
+        self.mesh = mesh
+
+    @property
+    def n_parties(self) -> int:
+        return int(self.mesh.shape[PARTY_AXIS])
+
+    @property
+    def tree_axis(self) -> str | None:
+        return "trees" if "trees" in self.mesh.axis_names else None
+
+    def program(self, fn: Callable, n_party: int, n_shared: int, *,
+                shared_specs=None, out_specs=None) -> Callable:
+        return protocol.sharded_program(fn, self.mesh, n_party, n_shared,
+                                        shared_specs=shared_specs,
+                                        out_specs=out_specs)
+
+    def jit(self, fn: Callable, n_party: int, n_shared: int, **kw) -> Callable:
+        return jax.jit(self.program(fn, n_party, n_shared, **kw))
+
+    def context(self):
+        """Mesh context for lowering (resolves in-program sharding names)."""
+        from repro import compat
+        return compat.set_mesh(self.mesh)
+
+
+def default_substrate(sub: Substrate | None = None) -> Substrate:
+    """The substrate an estimator runs on when none was injected: vmap
+    simulation.  Single owner of the estimators' fallback wiring."""
+    return sub if sub is not None else SimulatedSubstrate()
+
+
+def resolve_substrate(spec: str | Substrate | Any, mesh: Mesh | None = None,
+                      parties: int | None = None) -> Substrate:
+    """One-time substrate resolution for a session or server.
+
+    ``spec`` is "simulated", "sharded" (mesh required), or an already-built
+    Substrate (passed through).  ``parties``, when given, is validated
+    against a sharded mesh's party-axis size.
+    """
+    if isinstance(spec, str):
+        if spec == "simulated":
+            sub = SimulatedSubstrate()
+        elif spec == "sharded":
+            if mesh is None:
+                raise ValueError("substrate='sharded' requires a mesh")
+            sub = ShardedSubstrate(mesh)
+        else:
+            raise ValueError(f"unknown substrate {spec!r} "
+                             "(expected 'simulated', 'sharded', or a "
+                             "Substrate)")
+    elif isinstance(spec, Substrate):   # any conforming implementation
+        sub = spec
+    else:
+        raise ValueError(f"unknown substrate {spec!r} "
+                         "(expected 'simulated', 'sharded', or a Substrate)")
+    if parties is not None and sub.mesh is not None \
+            and int(sub.mesh.shape[PARTY_AXIS]) != parties:
+        raise ValueError(
+            f"mesh has {sub.mesh.shape[PARTY_AXIS]} '{PARTY_AXIS}' shards "
+            f"but the session declares {parties} parties")
+    return sub

@@ -185,17 +185,21 @@ FOREST_SHAPES = {
 
 
 def forest_case(shape_name: str, mesh: Mesh, params=None, *,
-                hist_impl: str = "scatter"):
+                hist_impl: str = "scatter", **predict_kw):
     """Lowerable federated-forest protocol on the (trees, parties) mesh.
 
     Layout: the 'parties' axis carries the vertical feature partition (the
     paper's clients); the 'trees' axis carries bagging tree-parallelism; a
     'pod' axis (if present) replicates.  Party-private outputs keep a
     leading parties dim; tree-sharded inputs/outputs use their leading
-    T dim.  Returns (fn, args, forest_params).
+    T dim.  The programs come from a sharded-substrate Federation session —
+    the same code path production serving compiles.  Returns
+    (fn, args, forest_params); ``predict_kw`` (compact / mask_dtype /
+    vote_impl) goes to Federation.predict_program, with ``compact=True``
+    appending the LeafTable leaf_idx ShapeDtypeStruct to args.
     """
-    from repro.core import prediction, tree
     from repro.core.types import ForestParams
+    from repro.federation import Federation
 
     fs = FOREST_SHAPES[shape_name]
     p = params or ForestParams(task="classification", n_classes=2,
@@ -205,6 +209,7 @@ def forest_case(shape_name: str, mesh: Mesh, params=None, *,
     t_global = fs.n_trees_per_shard * mesh.shape["trees"]
     n, fp = fs.n_samples, fs.n_feat_per_party
     f_total = m * fp
+    fed = Federation(parties=m, substrate="sharded", mesh=mesh)
 
     fit_args = (
         jax.ShapeDtypeStruct((m, n, fp), jnp.uint8),             # xb (by party)
@@ -213,43 +218,18 @@ def forest_case(shape_name: str, mesh: Mesh, params=None, *,
         jax.ShapeDtypeStruct((t_global, n), jnp.float32),        # weights
         jax.ShapeDtypeStruct((n, p.n_stat_channels), jnp.float32),  # y_stats
     )
-    fit_in_specs = (P("parties"), P("parties"), P("trees"), P("trees"), P())
-    # outputs are party-specific AND tree-sharded: (parties, T, ...) leaves
-    fit_out_specs = P("parties", "trees")
-    base_fit = tree.fit_spmd(p, hist_impl)
-
-    def fit_local(xb, gid, sel, w, ys):
-        # shard_map keeps sharded leading dims at local size 1 -> squeeze
-        out = base_fit(xb[0], gid[0], sel, w, ys)
-        return jax.tree.map(lambda a: a[None], out)
-
-    fit_sharded = compat.shard_map(fit_local, mesh=mesh,
-                                   in_specs=fit_in_specs,
-                                   out_specs=fit_out_specs, check_vma=False)
+    fit_sharded = fed.fit_program(p, hist_impl=hist_impl)
 
     if shape_name == "ff_train":
         return fit_sharded, fit_args, p
 
     trees_shape = jax.eval_shape(fit_sharded, *fit_args)
-    tree_specs = jax.tree.map(lambda _: P("parties", "trees"), trees_shape,
-                              is_leaf=lambda x: hasattr(x, "shape"))
-
-    def predict_local(tr, xbt):
-        tr = jax.tree.map(lambda a: a[0], tr)                # drop party dim
-        per_tree = prediction.forest_predict_oneround(tr, xbt[0], p,
-                                                      aggregate=False)
-        return per_tree[None]                                 # (1, T, N_t)
-
-    predict_sharded = compat.shard_map(
-        predict_local, mesh=mesh,
-        in_specs=(tree_specs, P("parties")),
-        out_specs=P("parties", "trees"), check_vma=False)
-
-    def predict(trees, xb_test):
-        per_tree = predict_sharded(trees, xb_test)           # (m, T_glob, N_t)
-        votes = (per_tree[0][..., None] ==
-                 jnp.arange(p.n_classes)[None, None]).sum(0)  # global vote
-        return jnp.argmax(votes, -1)
-
+    predict = fed.predict_program(p, **predict_kw)
     xb_test = jax.ShapeDtypeStruct((m, fs.n_test, fp), jnp.uint8)
-    return predict, (trees_shape, xb_test), p
+    args = (trees_shape, xb_test)
+    if predict_kw.get("compact"):
+        # serving-engine leaf table at full bottom-level capacity — the
+        # worst-case compact lowering (2^depth slots vs 2^(depth+1)-1)
+        args += (jax.ShapeDtypeStruct((t_global, 2 ** p.max_depth),
+                                      jnp.int32),)
+    return predict, args, p

@@ -11,7 +11,6 @@ import time          # noqa: E402
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro import compat                          # noqa: E402
 from repro import roofline as rl                  # noqa: E402
 from repro.launch import cases, mesh as mesh_mod  # noqa: E402
 
@@ -85,9 +84,10 @@ def run_nn_variant(arch: str, shape: str, variant: str, force=False) -> dict:
 
 
 # ff_train variant name -> (histogram backend, subtraction trick).  The
-# registry key goes straight through ForestParams/forest_case, so any
-# backend registered in kernels.ops (including the GPU segment_sum one) is
-# exercisable from the dry-run hillclimb without touching the builder.
+# registry key goes through the Federation session (cases.forest_case builds
+# its programs from a sharded-substrate session), so any backend registered
+# in kernels.ops (including the GPU segment_sum one) is exercisable from the
+# dry-run hillclimb without touching the builder.
 FF_TRAIN_VARIANTS: dict[str, dict] = {
     "baseline":          dict(hist_impl="ref"),      # einsum (MXU fidelity)
     "hist_sub":          dict(hist_impl="ref", hist_subtraction=True),
@@ -128,8 +128,10 @@ def run_ff_train_variant(variant: str, force=False) -> dict:
 
 
 def run_ff_variant(variant: str, force=False) -> dict:
-    """federated-forest × ff_predict: int32 vs uint8 membership psum."""
-    from repro.core import prediction, tree
+    """federated-forest × ff_predict: int32 vs uint8 membership psum.
+
+    Every variant is the Federation session's predict program (the exact
+    closure ForestServer compiles) with the knobs turned."""
     out = OUT_DIR / f"federated-forest__ff_predict__{variant}.json"
     if out.exists() and not force:
         return json.loads(out.read_text())
@@ -139,43 +141,9 @@ def run_ff_variant(variant: str, force=False) -> dict:
     vote_impl = "argmax" if variant.endswith("argmax") else "einsum"
     compact = variant.endswith("compact")
     mesh = mesh_mod.make_forest_mesh()
-    # rebuild the predict case with the dtype knob
-    fn, args, p = cases.forest_case("ff_predict", mesh)
-    if variant != "baseline":
-        from jax.sharding import PartitionSpec as P
-        trees_shape, xb_test = args
-        t_global = jax.tree_util.tree_leaves(trees_shape)[0].shape[1]
-        shared_shapes, shared_specs = (), ()
-        if compact:
-            # serving-engine leaf table at full bottom-level capacity — the
-            # worst-case compact lowering (2^depth slots vs 2^(depth+1)-1)
-            shared_shapes = (
-                jax.ShapeDtypeStruct((t_global, 2 ** p.max_depth), jnp.int32),)
-            shared_specs = (P("trees"),)
-            args = args + shared_shapes
-
-        def predict_local(tr, xbt, *shared):
-            tr = jax.tree.map(lambda a: a[0], tr)
-            per_tree = prediction.forest_predict_oneround(
-                tr, xbt[0], p, aggregate=False, mask_dtype=mask_dtype,
-                vote_impl=vote_impl,
-                leaf_idx=shared[0] if shared else None)
-            return per_tree[None]
-
-        tree_specs = jax.tree.map(lambda _: P("parties", "trees"), trees_shape,
-                                  is_leaf=lambda x: hasattr(x, "shape"))
-        inner = compat.shard_map(predict_local, mesh=mesh,
-                                 in_specs=(tree_specs, P("parties"))
-                                 + shared_specs,
-                                 out_specs=P("parties", "trees"),
-                                 check_vma=False)
-
-        def fn(trees, xbt, *shared):  # noqa: F811 — vote as in forest_case
-            per_tree = inner(trees, xbt, *shared)
-            votes = (per_tree[0][..., None]
-                     == jnp.arange(p.n_classes)[None, None]).sum(0)
-            return jnp.argmax(votes, -1)
-
+    fn, args, p = cases.forest_case("ff_predict", mesh, compact=compact,
+                                    mask_dtype=mask_dtype,
+                                    vote_impl=vote_impl)
     t0 = time.time()
     compiled = jax.jit(fn).lower(*args).compile()
     r = rl.analyze(compiled)

@@ -1,16 +1,18 @@
 """Serving driver for the federated forest: batched one-round prediction.
 
-Fits (or checkpoint-restores) a forest, stands up a ForestServer, and pushes
-randomized request traffic through the RequestQueue — the forest counterpart
-of launch/serve.py's transformer decode driver.  Reports per-wave latency,
-aggregate rows/s, psum payload bytes, and the compile count (which must stop
-growing after warmup: the bucket/pad/compile-once contract).
+One Federation session owns the whole lifecycle: ingest -> fit ->
+(checkpoint round-trip) -> serve.  The server comes out of ``fed.serve``
+pre-bound to the session's substrate; traffic goes through the RequestQueue
+— the forest counterpart of launch/serve.py's transformer decode driver.
+Reports per-wave latency, aggregate rows/s, psum payload bytes, and the
+compile count (which must stop growing after warmup: the
+bucket/pad/compile-once contract).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve_forest --parties 4 --depth 8
   PYTHONPATH=src python -m repro.launch.serve_forest --dense   # no LeafTable
   PYTHONPATH=src python -m repro.launch.serve_forest --ckpt-dir /tmp/ff \
-      --save-ckpt   # round-trip through ckpt/checkpoint.py first
+      --save-ckpt   # round-trip through fed.save / fed.load first
 """
 from __future__ import annotations
 
@@ -19,9 +21,10 @@ import time
 
 import numpy as np
 
-from repro.core import ForestParams, fit_federated_forest
+from repro.core import ForestParams
 from repro.data import make_classification
-from repro.serving import ForestServer, RequestQueue
+from repro.federation import Federation
+from repro.serving import RequestQueue
 
 
 def main() -> None:
@@ -48,22 +51,21 @@ def main() -> None:
     p = ForestParams(n_estimators=args.trees, max_depth=args.depth,
                      n_bins=16, seed=0)
     x, y = make_classification(args.train_rows, args.features, 2, seed=0)
+
+    fed = Federation(parties=args.parties, n_bins=p.n_bins)
+    fed.ingest(x, y)
     t0 = time.time()
-    ff = fit_federated_forest(x, y, args.parties, p)
+    model = fed.fit(p)
     print(f"fit: {args.trees} trees x depth {args.depth} over "
           f"{args.parties} parties in {time.time() - t0:.1f}s")
 
     if args.ckpt_dir and args.save_ckpt:
-        from repro import ckpt
-        ckpt.save_checkpoint(args.ckpt_dir, args.trees, ff.trees_)
+        fed.save(model, args.ckpt_dir, step=args.trees)
     if args.ckpt_dir:
-        server = ForestServer.from_checkpoint(
-            args.ckpt_dir, p, compact=not args.dense, buckets=buckets,
-            partition=ff.partition_, decode=ff._decode)
+        model = fed.load(args.ckpt_dir, p)
         print(f"restored PartyTree stack from {args.ckpt_dir}")
-    else:
-        server = ForestServer.from_forest(ff, compact=not args.dense,
-                                          buckets=buckets)
+
+    server = fed.serve(model, compact=not args.dense, buckets=buckets)
     if server.leaf_table is not None:
         from repro.serving.plan import compaction_ratio
         print(f"leaf table: {server.leaf_table.capacity} slots vs "

@@ -22,7 +22,9 @@ servable system, in three pieces:
     one launch; a huge one spans several), like launch/serve.py's slot-based
     batching for the transformer decode path.
 
-Entry points: ``launch/serve_forest.py`` (CLI traffic driver) and
+Entry points: ``Federation.serve`` (the session API — pre-binds the mesh and
+keeps the LeafTable plan fresh across model updates),
+``launch/serve_forest.py`` (CLI traffic driver) and
 ``benchmarks/serving_bench.py`` (dense vs leaf-compacted rows/s, p50/p95).
 """
 from repro.serving.engine import ForestServer, load_forest_trees  # noqa: F401

@@ -13,13 +13,16 @@ for the transformer path:
     (micro-batching); per-wave latency / rows-per-second / psum payload bytes
     are recorded in ``wave_stats``;
   * the prediction program is the paper's one-round protocol, SPMD over the
-    party axis — ``protocol.run_simulated`` (vmap, single host) or
-    ``run_sharded`` (shard_map over a (trees, parties) mesh, with the
-    ``aggregate=False`` per-tree hook and the forest vote as the cross-shard
-    reduction, exactly like launch/cases.forest_case);
+    party axis, built by repro.federation.programs against the server's
+    Substrate — SimulatedSubstrate (vmap, single host) or ShardedSubstrate
+    (shard_map over a (trees, parties) mesh, with the ``aggregate=False``
+    per-tree hook and the forest vote as the cross-shard reduction);
   * with ``compact=True`` (default) a ``LeafTable`` (plan.py) switches the
     kernel to the leaf-compacted membership mask — bit-identical outputs,
     psum and vote shrunk from ``n_nodes`` to live-leaf columns.
+
+Prefer building servers through ``Federation.serve`` — the session pre-binds
+its mesh and keeps the LeafTable plan fresh across model updates.
 """
 from __future__ import annotations
 
@@ -31,11 +34,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import compat
 from repro.ckpt import checkpoint as ckpt
-from repro.core import prediction, protocol
+from repro.core import prediction
 from repro.core.tree import PartyTree
 from repro.core.types import ForestParams
+from repro.federation import programs
+from repro.federation.substrate import ShardedSubstrate, SimulatedSubstrate
 from repro.serving import plan
 
 DEFAULT_BUCKETS = (32, 256, 2048)
@@ -86,24 +90,23 @@ class ForestServer:
                  n_features_per_party: int | None = None):
         if not buckets or list(buckets) != sorted(set(buckets)):
             raise ValueError(f"buckets must be ascending/unique: {buckets}")
-        self.trees = jax.tree.map(jnp.asarray, trees)
         self.params = params
         self.buckets = tuple(int(b) for b in buckets)
         self.compact = compact
         self.mask_dtype = mask_dtype
         self.vote_impl = vote_impl
         self.mesh = mesh
+        self.substrate = (ShardedSubstrate(mesh) if mesh is not None
+                          else SimulatedSubstrate())
         self.partition = partition
         self.decode = decode
-        self.n_parties = int(self.trees.is_leaf.shape[0])
-        self.leaf_table = (plan.build_leaf_table(
-            self.trees, params, pad_multiple=leaf_pad_multiple)
-            if compact else None)
         self.compile_count = 0
         # bounded: a long-running server must not leak one dict per wave
         self.wave_stats: collections.deque = collections.deque(maxlen=4096)
         self._exec: dict[int, Callable] = {}
         self._request_fp = n_features_per_party
+        self._leaf_pad = leaf_pad_multiple
+        self.refresh(trees)
 
     # ------------------------------------------------------------ factories
     @classmethod
@@ -118,68 +121,61 @@ class ForestServer:
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, params: ForestParams,
                         step: int | None = None, **kw) -> "ForestServer":
-        """Load the PartyTree stack via ckpt/checkpoint.py and serve it."""
-        return cls(load_forest_trees(ckpt_dir, step), params, **kw)
+        """Checkpoint -> serving, through a Federation session: the session
+        rehydrates the fitted forest handle (reconstructing the label decode
+        where possible) and binds the server to the right substrate.  The
+        party count comes from the checkpointed stack itself."""
+        from repro.federation import Federation
+        mesh = kw.pop("mesh", None)
+        trees = load_forest_trees(ckpt_dir, step)
+        fed = Federation(parties=int(trees.is_leaf.shape[0]),
+                         substrate="sharded" if mesh is not None
+                         else "simulated", mesh=mesh)
+        # fit-time privacy flags steer load's decode reconstruction; the
+        # rest of kw configures the server itself
+        model_kw = {k: kw.pop(k) for k in ("encrypt_labels",
+                                           "mask_regression") if k in kw}
+        model = fed.load(ckpt_dir, params, step=step, trees=trees,
+                         partition=kw.pop("partition", None),
+                         decode=kw.pop("decode", None), **model_kw)
+        compact = kw.pop("compact", True)
+        buckets = kw.pop("buckets", None)
+        return fed.serve(model, buckets=buckets, compact=compact,
+                         server_cls=cls, **kw)
 
     # ------------------------------------------------------- compile layer
-    def _predict_fn(self):
-        p, vote, md, lt = self.params, self.vote_impl, self.mask_dtype, \
-            self.leaf_table
+    def refresh(self, trees: PartyTree) -> "ForestServer":
+        """(Re)bind the server to a PartyTree stack.
 
-        def fn(trees, xbt, *shared):
-            return prediction.forest_predict_oneround(
-                trees, xbt, p, aggregate=True, mask_dtype=md,
-                vote_impl=vote, leaf_idx=shared[0] if shared else None)
-        return fn, (() if lt is None else (lt.leaf_idx,))
+        Called at construction, and again by ``Federation.serve`` whenever a
+        model's ``trees_`` changed underneath a cached server (e.g. a
+        ``fit_resumable`` continuation extended the forest): the LeafTable
+        plan is rebuilt and compiled executables are dropped — their shapes
+        baked in the old stack.  ``compile_count`` keeps counting up, so the
+        compile-once contract stays observable across refreshes."""
+        self.trees = jax.tree.map(jnp.asarray, trees)
+        self.n_parties = int(self.trees.is_leaf.shape[0])
+        self.leaf_table = (plan.build_leaf_table(
+            self.trees, self.params, pad_multiple=self._leaf_pad)
+            if self.compact else None)
+        self._exec = {}
+        return self
 
-    def _build_sharded(self):
-        """shard_map program: parties x trees sharded, per-tree outputs
-        reduced by the caller-side forest vote (the aggregate=False hook)."""
-        from jax.sharding import PartitionSpec as P
-        p, vote, md, lt = self.params, self.vote_impl, self.mask_dtype, \
-            self.leaf_table
-        tree_specs = jax.tree.map(lambda _: P("parties", "trees"), self.trees,
-                                  is_leaf=lambda x: hasattr(x, "shape"))
-
-        def predict_local(tr, xbt, *shared):
-            tr = jax.tree.map(lambda a: a[0], tr)            # drop party dim
-            per_tree = prediction.forest_predict_oneround(
-                tr, xbt[0], p, aggregate=False, mask_dtype=md,
-                vote_impl=vote, leaf_idx=shared[0] if shared else None)
-            return per_tree[None]                            # (1, T_loc, N)
-
-        shared = () if lt is None else (lt.leaf_idx,)
-        in_specs = (tree_specs, P("parties")) + (P("trees"),) * len(shared)
-        inner = compat.shard_map(predict_local, mesh=self.mesh,
-                                 in_specs=in_specs,
-                                 out_specs=P("parties", "trees"),
-                                 check_vma=False)
-
-        def fn(trees, xbt, *shared):
-            per_tree = inner(trees, xbt, *shared)            # (m, T, N)
-            if p.task == "classification":
-                votes = (per_tree[0][..., None] ==
-                         jnp.arange(p.n_classes)[None, None]).sum(0)
-                return jnp.argmax(votes, -1)
-            return per_tree[0].mean(0)
+    def _program(self):
+        fn = programs.forest_predict_program(
+            self.substrate, self.params, compact=self.leaf_table is not None,
+            mask_dtype=self.mask_dtype, vote_impl=self.vote_impl)
+        shared = () if self.leaf_table is None else (self.leaf_table.leaf_idx,)
         return fn, shared
 
     def _executable(self, bucket: int):
         if bucket in self._exec:
             return self._exec[bucket]
         xbt = jnp.zeros((self.n_parties, bucket, self._fp()), jnp.uint8)
-        if self.mesh is not None:
-            fn, shared = self._build_sharded()
-            args = (self.trees, xbt) + shared
-            with compat.set_mesh(self.mesh):
-                compiled = jax.jit(fn).lower(*args).compile()
-        else:
-            fn, shared = self._predict_fn()
-
-            def wave(trees, xbt, *shared):
-                return protocol.run_simulated(fn, (trees, xbt), shared)
-            args = (self.trees, xbt) + shared
-            compiled = jax.jit(wave).lower(*args).compile()
+        fn, shared = self._program()
+        args = (self.trees, xbt) + shared
+        with self.substrate.context():
+            compiled = jax.jit(fn).lower(*args).compile()
         self.compile_count += 1
         self._exec[bucket] = compiled
         return compiled
