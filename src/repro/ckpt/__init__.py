@@ -1,2 +1,2 @@
 from repro.ckpt.checkpoint import (save_checkpoint, restore_checkpoint,  # noqa: F401
-                                   peek_checkpoint, latest_step)
+                                   peek_checkpoint, latest_step, read_meta)

@@ -29,6 +29,7 @@ except ImportError:                       # pragma: no cover - env dependent
 
 _ZSTD_NAME = "arrays.msgpack.zst"
 _ZLIB_NAME = "arrays.msgpack.zlib"
+_META_NAME = "meta.msgpack"
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -40,7 +41,12 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return flat
 
 
-def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any) -> str:
+def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any,
+                    meta: dict | None = None) -> str:
+    """Snapshot a pytree; ``meta`` (small JSON-like dict, e.g. the model
+    family tag Federation.save writes) rides inside the same atomic step
+    directory as ``meta.msgpack`` — old checkpoints without it read back as
+    an empty dict (read_meta)."""
     d = pathlib.Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     tmp = d / f".tmp_step_{step:08d}"
@@ -60,11 +66,23 @@ def save_checkpoint(directory: str | os.PathLike, step: int, tree: Any) -> str:
             zstandard.ZstdCompressor(level=3).compress(raw))
     else:
         (tmp / _ZLIB_NAME).write_bytes(zlib.compress(raw, 3))
+    if meta:
+        (tmp / _META_NAME).write_bytes(
+            msgpack.packb(dict(meta), use_bin_type=True))
     if final.exists():
         import shutil
         shutil.rmtree(final)
     tmp.rename(final)                      # atomic publish
     return str(final)
+
+
+def read_meta(directory: str | os.PathLike, step: int) -> dict:
+    """The ``meta`` dict a checkpoint was saved with ({} for legacy
+    checkpoints that predate metadata)."""
+    p = pathlib.Path(directory) / f"step_{step:08d}" / _META_NAME
+    if not p.exists():
+        return {}
+    return msgpack.unpackb(p.read_bytes(), raw=False)
 
 
 def peek_checkpoint(directory: str | os.PathLike,

@@ -50,6 +50,24 @@ class BoostParams:
                             frontier_cap=self.frontier_cap)
 
 
+def stack_rounds(trees: list):
+    """Stack per-round PartyTrees (each (M, 1, ...)) into one (M, R, ...)
+    PartyTree along the tree axis — the layout the serving engine compiles
+    against and ``Federation.save`` checkpoints."""
+    if not trees:
+        raise ValueError("no fitted rounds to stack")
+    if len(trees) == 1:
+        return trees[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *trees)
+
+
+def split_rounds(stack) -> list:
+    """Inverse of :func:`stack_rounds`: (M, R, ...) -> R (M, 1, ...) trees
+    (``Federation.load`` rehydrates the per-round list from a checkpoint)."""
+    r = int(stack.is_leaf.shape[1])
+    return [jax.tree.map(lambda a: a[:, i:i + 1], stack) for i in range(r)]
+
+
 @dataclasses.dataclass
 class FederatedBoosting:
     params: BoostParams
@@ -61,6 +79,15 @@ class FederatedBoosting:
     def _sub(self):
         from repro.federation.substrate import default_substrate
         return default_substrate(self.substrate)
+
+    def _predict_runner(self):
+        """The jitted per-round predict program — built in fit, or lazily
+        for models rehydrated from a checkpoint (Federation.load)."""
+        if getattr(self, "_pred_run", None) is None:
+            from repro.federation import programs
+            self._pred_run = jax.jit(programs.forest_predict_program(
+                self._sub(), self.params.tree_params(), tree_sharded=False))
+        return self._pred_run
 
     def fit(self, partition: VerticalPartition, y: np.ndarray):
         from repro.federation import programs
@@ -117,10 +144,11 @@ class FederatedBoosting:
         from repro.federation import programs
         xb = jnp.asarray(self._partition.bin_test(np.asarray(x_test)))
         f = np.full(x_test.shape[0], self.base_)
+        run = self._predict_runner()
         with self._sub().context():
             for trees in self.trees_:
                 f = f + self.params.learning_rate * programs.party0(
-                    self._pred_run(trees, xb))
+                    run(trees, xb))
         return f
 
     def predict(self, x_test: np.ndarray) -> np.ndarray:

@@ -102,14 +102,20 @@ class FederatedLinear:
             return part.split_raw(x)
         return [np.asarray(b) for b in x]
 
+    def _standardized(self, x_parts: list[np.ndarray]) -> np.ndarray:
+        """(M, N, Fmax) stack of the blocks, standardized with the fit-time
+        moments — the single owner of the normalize step shared by fit,
+        predict, and the serving engine's LinearServer._prep."""
+        return self._stack([(p - m) / s for p, m, s
+                            in zip(x_parts, self._mu, self._sd)])
+
     def fit(self, x_parts, y: np.ndarray):
         """x_parts: per-party raw blocks (same N, varying F_i), or a
         VerticalPartition with raw_parts."""
         x_parts = self._blocks(x_parts)
         self._mu = [p.mean(0) for p in x_parts]
         self._sd = [p.std(0) + 1e-8 for p in x_parts]
-        xs = self._stack([(p - m) / s for p, m, s
-                          in zip(x_parts, self._mu, self._sd)])
+        xs = self._standardized(x_parts)
         fn = lambda xi, yy: _spmd_fit(xi, yy, task=self.task, lr=self.lr,
                                       steps=self.steps, l2=self.l2)
         sub = self._sub()
@@ -120,9 +126,7 @@ class FederatedLinear:
 
     def predict(self, x_parts) -> np.ndarray:
         from repro.federation import programs
-        x_parts = self._blocks(x_parts)
-        xs = self._stack([(p - m) / s for p, m, s
-                          in zip(x_parts, self._mu, self._sd)])
+        xs = self._standardized(self._blocks(x_parts))
         fn = lambda xi, w, b: _spmd_predict(xi, w, b, task=self.task)
         sub = self._sub()
         with sub.context():

@@ -102,6 +102,45 @@ def forest_predict_program(substrate, params: ForestParams, *,
     return fn
 
 
+def boosting_predict_program(substrate, params, *, compact: bool = False,
+                             mask_dtype=jnp.uint8):
+    """fn(trees, xbt, base[, leaf_idx]) — one-wave boosting prediction.
+
+    ``trees`` is the per-round PartyTree stack (leading (M, R, ...) axes,
+    core.boosting.stack_rounds); the one-round membership protocol runs with
+    ``aggregate=False`` per-round outputs and the boosting reduction
+    (base + lr * Σ rounds, thresholded for the binary task) is fused in the
+    same program — ONE collective for the whole ensemble, like the forest.
+    ``params`` is a BoostParams; ``base`` rides as a shared scalar arg so a
+    refreshed model re-binds without recompiling the closure."""
+    tp = params.tree_params()
+    lr, task = params.learning_rate, params.task
+    n_shared = 1 if compact else 0
+
+    def fn(trees, xbt, base, *shared):
+        per_round = prediction.forest_predict_oneround(
+            trees, xbt, tp, aggregate=False, mask_dtype=mask_dtype,
+            leaf_idx=shared[0] if shared else None)          # (R, N)
+        f = base + lr * per_round.sum(0)
+        if task == "binary":
+            return (f > 0).astype(jnp.int32)
+        return f
+
+    return substrate.program(fn, 2, 1 + n_shared)
+
+
+def linear_predict_program(substrate, task: str):
+    """fn(x_i, w_i, b) — the F-LR joint-logit prediction (one psum).
+
+    ``x_i`` and ``w_i`` are party args (each party's standardized feature
+    block and its weight block); the bias ``b`` is shared (it is psum-trained
+    and identical across parties)."""
+    def fn(x_i, w_i, b):
+        from repro.core.fedlinear import _spmd_predict
+        return _spmd_predict(x_i, w_i, b, task=task)
+    return substrate.program(fn, 2, 1)
+
+
 def forest_predict_classical_program(substrate, params: ForestParams):
     """fn(trees, xb_test) — the multi-round baseline (paper Figs. 4-6)."""
     def fn(trees, xbt):

@@ -35,6 +35,15 @@ from repro.federation.estimator import Estimator
 from repro.federation.substrate import Substrate, resolve_substrate
 
 
+def _token_matches(old: tuple, new: tuple) -> bool:
+    """Compare engine model tokens: object entries by identity (the stored
+    token pins them, so ids can't be reused), value entries by equality."""
+    prim = (int, float, str, bool, type(None))
+    return len(old) == len(new) and all(
+        (o == n) if isinstance(o, prim) else (o is n)
+        for o, n in zip(old, new))
+
+
 class Federation:
     """A federated-learning session: participants + substrate + lifecycle.
 
@@ -69,8 +78,10 @@ class Federation:
         # cache one entry per model they've predicted/served, which is the
         # session's working set by construction.
         self._plans: dict[int, tuple[Any, Any, Any]] = {}
-        # (id(model), buckets, compact, cls) -> (model, server, trees_ ref)
-        self._servers: dict[tuple, tuple[Any, Any, Any]] = {}
+        # (id(model), buckets|"autotune", compact, max_inflight, cls) ->
+        # (model, server, model_token): the token (engine.model_token) pins
+        # the state objects it references, so staleness checks stay exact
+        self._servers: dict[tuple, tuple[Any, Any, tuple]] = {}
 
     # ------------------------------------------------------------------ data
     def ingest(self, x: np.ndarray, y: np.ndarray | None = None, *,
@@ -180,55 +191,97 @@ class Federation:
 
     # ----------------------------------------------------------------- serve
     def serve(self, model: Estimator, *, buckets=None, compact: bool = True,
-              server_cls=None, **server_kw):
-        """Stand up a ForestServer for ``model``, pre-bound to the session's
-        mesh (sharded substrate -> shard_map serving; simulated -> vmap).
+              max_inflight: int = 1, autotune_buckets: bool = False,
+              traffic=None, server_cls=None, **server_kw):
+        """Stand up a serving engine for ``model``, pre-bound to the
+        session's mesh (sharded substrate -> shard_map serving; simulated ->
+        vmap).  The engine class is dispatched on the model family
+        (forest -> ForestServer, boosting -> BoostingServer, F-LR ->
+        LinearServer — serving/engine.server_for).
 
-        Repeated calls with the same (model, buckets, compact) return the
-        same server — compiled bucket executables are reused — unless the
-        model's ``trees_`` changed, in which case the server is refreshed
-        in place (LeafTable plan rebuilt, stale executables dropped)."""
-        from repro.serving import engine
-        cls = server_cls or engine.ForestServer
-        buckets = tuple(buckets) if buckets is not None \
+        ``max_inflight`` sets the async wave-ring depth (1 = synchronous
+        waves).  ``autotune_buckets=True`` derives the bucket set from
+        observed traffic instead of the warm-start guess: pass ``traffic``
+        (wave_stats / request_stats records, or plain row counts) to tune a
+        fresh server up front; on a cached server the engine's own
+        ``wave_stats`` are used, and the bucket set is refreshed in place
+        through ``set_buckets`` — the same way ``trees_`` changes refresh
+        plans, with the compile-once contract holding per autotune epoch.
+
+        Repeated calls with the same (model, buckets, compact, max_inflight)
+        return the same server — compiled bucket executables are reused —
+        unless the model's state changed, in which case the server is
+        refreshed in place (plan rebuilt, stale executables dropped)."""
+        from repro.serving import autotune, engine
+        cls = server_cls or engine.server_for(model)
+        warm = tuple(buckets) if buckets is not None \
             else engine.DEFAULT_BUCKETS
         # only the knob-free path is cached: extra server_kw (vote_impl,
         # mask_dtype, ...) isn't part of the key, and silently returning a
         # server built with different knobs would drop the request
         cacheable = not server_kw
-        key = (id(model), buckets, compact, cls)
+        key = (id(model), ("autotune",) + warm if autotune_buckets else warm,
+               compact, int(max_inflight), cls)
         cached = self._servers.get(key) if cacheable else None
         if cached is not None and cached[0] is model:
-            server, trees_ref = cached[1], cached[2]
-            if trees_ref is not model.trees_:
-                server.refresh(model.trees_)
-                self._servers[key] = (model, server, model.trees_)
+            server, token = cached[1], cached[2]
+            if not _token_matches(token, cls.model_token(model)):
+                server.refresh_from(model)
+                self._servers[key] = (model, server, cls.model_token(model))
+            if autotune_buckets:
+                source = traffic if traffic is not None else server.wave_stats
+                tuned = autotune.autotune_buckets(source, warm=server.buckets)
+                if tuned != server.buckets:
+                    server.set_buckets(tuned)
             return server
+        if autotune_buckets and traffic is not None:
+            warm = autotune.autotune_buckets(traffic, warm=warm)
         server_kw.setdefault("mesh", self.substrate.mesh)
-        server = cls.from_forest(model, buckets=buckets, compact=compact,
-                                 **server_kw)
+        server = cls.from_model(model, buckets=warm, compact=compact,
+                                max_inflight=max_inflight, **server_kw)
         if cacheable:
-            self._servers[key] = (model, server, model.trees_)
+            self._servers[key] = (model, server, cls.model_token(model))
         return server
 
     # ------------------------------------------------------------ checkpoint
     def save(self, model: Estimator, ckpt_dir: str,
              step: int | None = None) -> str:
-        """Checkpoint a fitted forest's PartyTree stack (ckpt/checkpoint.py).
-        Default step = the stack's tree count."""
+        """Checkpoint a fitted tree model's PartyTree stack
+        (ckpt/checkpoint.py), tagged with its model family so ``load``
+        rehydrates the right estimator — a boosting stack silently reloaded
+        as a forest would average leaf values instead of summing Newton
+        steps and predict garbage.  Default step = the stack's tree/round
+        count."""
         from repro import ckpt
+        from repro.core.boosting import FederatedBoosting, stack_rounds
+        if isinstance(model, FederatedBoosting):
+            if not model.trees_:
+                raise TypeError("save() expects a fitted model")
+            stack = stack_rounds(model.trees_)
+            step = len(model.trees_) if step is None else int(step)
+            meta = {"family": "boosting", "task": model.params.task,
+                    "n_rounds": len(model.trees_),
+                    "learning_rate": float(model.params.learning_rate),
+                    "base": float(model.base_)}
+            return ckpt.save_checkpoint(ckpt_dir, step, stack, meta=meta)
         trees = getattr(model, "trees_", None)
         if trees is None or not hasattr(trees, "is_leaf"):
-            raise TypeError("save() expects a fitted forest model")
+            raise TypeError("save() expects a fitted forest/boosting model")
         step = int(trees.is_leaf.shape[1]) if step is None else int(step)
-        return ckpt.save_checkpoint(ckpt_dir, step, trees)
+        return ckpt.save_checkpoint(ckpt_dir, step, trees,
+                                    meta={"family": "forest"})
 
-    def load(self, ckpt_dir: str, params: ForestParams, *,
+    def load(self, ckpt_dir: str, params, *,
              step: int | None = None,
              partition: VerticalPartition | None = None,
              decode: Callable | None = None, trees=None,
              **model_kw) -> Estimator:
-        """Rehydrate a fitted forest handle from a checkpoint.
+        """Rehydrate a fitted model handle from a checkpoint.
+
+        ``load`` dispatches on the checkpoint's model-family tag (written by
+        :meth:`save`): a ForestParams spec requires a forest (or untagged
+        legacy) checkpoint, a BoostParams spec requires a boosting one —
+        mismatches raise instead of silently rehydrating the wrong family.
 
         The label decode is reconstructed from (n_classes, seed) for
         encrypted-classification forests (crypto.label_decoder), so a loaded
@@ -240,9 +293,34 @@ class Federation:
         ``decode``), exactly as it was constructed for fit; otherwise the
         reconstructed permutation decode scrambles its labels.
         ``trees`` accepts an already-loaded stack to avoid a second read."""
+        from repro import ckpt
         from repro.core import crypto
+        from repro.core.boosting import BoostParams
         from repro.core.forest import FederatedForest
         from repro.serving.engine import load_forest_trees
+        if step is None:
+            step = ckpt.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+        meta = ckpt.read_meta(ckpt_dir, step)
+        family = meta.get("family")
+        if isinstance(params, BoostParams):
+            if family != "boosting":
+                raise ValueError(
+                    f"checkpoint at {ckpt_dir} step {step} holds a "
+                    f"{family or 'forest (untagged legacy)'} model but "
+                    f"load() was given BoostParams; load it with the spec "
+                    f"of the family it was saved as")
+            return self._load_boosting(ckpt_dir, params, step, meta,
+                                       partition, trees, **model_kw)
+        if family not in (None, "forest"):
+            raise ValueError(
+                f"checkpoint at {ckpt_dir} step {step} holds a {family!r} "
+                f"model; rehydrating it as a forest would predict garbage — "
+                f"load it with the matching spec (e.g. BoostParams)")
+        if not isinstance(params, ForestParams):
+            raise TypeError(f"load() dispatches on ForestParams | "
+                            f"BoostParams, got {type(params).__name__}")
         model = FederatedForest(self._apply_session(params),
                                 substrate=self.substrate, **model_kw)
         model.trees_ = trees if trees is not None \
@@ -264,6 +342,43 @@ class Federation:
             decode = crypto.regression_unmasker(params.seed)
         model._decode = decode if decode is not None \
             else (lambda v: np.asarray(v))
+        return model
+
+    def _load_boosting(self, ckpt_dir: str, params, step: int, meta: dict,
+                       partition, trees, **model_kw) -> Estimator:
+        """Rehydrate a FederatedBoosting handle from a family-tagged
+        checkpoint: the concatenated round stack splits back into per-round
+        trees; base / task / learning-rate come from the metadata."""
+        from repro.core.boosting import FederatedBoosting, split_rounds
+        from repro.serving.engine import load_forest_trees
+        if params.task != meta.get("task"):
+            raise ValueError(
+                f"checkpointed boosting model was fitted with "
+                f"task={meta.get('task')!r} but the spec says "
+                f"{params.task!r}")
+        if abs(float(params.learning_rate)
+               - float(meta.get("learning_rate", params.learning_rate))) \
+                > 1e-12:
+            raise ValueError(
+                f"checkpointed boosting model used "
+                f"learning_rate={meta.get('learning_rate')} but the spec "
+                f"says {params.learning_rate} — predictions would rescale "
+                f"every round's step")
+        stack = trees if trees is not None \
+            else load_forest_trees(ckpt_dir, step)
+        model = FederatedBoosting(self._apply_session(params),
+                                  substrate=self.substrate, **model_kw)
+        model.trees_ = split_rounds(stack)
+        model.base_ = float(meta["base"])
+        model._partition = partition if partition is not None \
+            else self._partition
+        stack_parties = int(stack.is_leaf.shape[0])
+        if model._partition is not None \
+                and model._partition.n_parties != stack_parties:
+            raise ValueError(
+                f"checkpointed stack has {stack_parties} parties but the "
+                f"attached partition has {model._partition.n_parties}; pass "
+                f"the partition this model was fitted with (or none)")
         return model
 
     # ------------------------------------------- lowerable programs (dry-run)

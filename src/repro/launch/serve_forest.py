@@ -11,6 +11,8 @@ bucket/pad/compile-once contract).
 Examples:
   PYTHONPATH=src python -m repro.launch.serve_forest --parties 4 --depth 8
   PYTHONPATH=src python -m repro.launch.serve_forest --dense   # no LeafTable
+  PYTHONPATH=src python -m repro.launch.serve_forest --async-waves 4 \
+      --autotune   # async wave ring + traffic-autotuned buckets
   PYTHONPATH=src python -m repro.launch.serve_forest --ckpt-dir /tmp/ff \
       --save-ckpt   # round-trip through fed.save / fed.load first
 """
@@ -40,6 +42,13 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--dense", action="store_true",
                     help="disable leaf compaction (baseline mask)")
+    ap.add_argument("--async-waves", type=int, default=1, metavar="K",
+                    help="in-flight wave ring depth (1 = synchronous; >1 "
+                         "overlaps host binning/padding with device "
+                         "execution)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="after the first traffic round, retune the bucket "
+                         "set from the observed request-size distribution")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore the PartyTree stack from this checkpoint "
                          "directory instead of using the in-memory fit")
@@ -65,7 +74,8 @@ def main() -> None:
         model = fed.load(args.ckpt_dir, p)
         print(f"restored PartyTree stack from {args.ckpt_dir}")
 
-    server = fed.serve(model, compact=not args.dense, buckets=buckets)
+    server = fed.serve(model, compact=not args.dense, buckets=buckets,
+                       max_inflight=args.async_waves)
     if server.leaf_table is not None:
         from repro.serving.plan import compaction_ratio
         print(f"leaf table: {server.leaf_table.capacity} slots vs "
@@ -88,13 +98,30 @@ def main() -> None:
         dt = time.time() - t0
         rows = int(sizes.sum())
         print(f"round {rnd}: {len(results)} requests / {rows} rows in "
-              f"{dt:.3f}s ({rows / max(dt, 1e-9):.0f} rows/s)")
+              f"{dt:.3f}s ({rows / max(dt, 1e-9):.0f} rows/s, "
+              f"inflight<={server.max_inflight})")
+        if args.autotune and rnd == 0:
+            server = fed.serve(model, compact=not args.dense,
+                               buckets=buckets, autotune_buckets=True,
+                               max_inflight=args.async_waves,
+                               traffic=queue.request_stats)
+            server.warmup()
+            queue = RequestQueue(server)
+            print(f"autotune: buckets {buckets} -> {server.buckets} "
+                  f"(compiles now {server.compile_count})")
     s = server.stats_summary()
-    print(f"summary: waves={s['waves']} p50={s['p50_ms']:.2f}ms "
-          f"p95={s['p95_ms']:.2f}ms rows/s={s['rows_per_s']:.0f} "
-          f"psum_bytes_total={s['comm_bytes_total']} "
-          f"compiles={s['compile_count']}")
-    assert server.compile_count == len(buckets), "recompiled after warmup!"
+    if s:
+        print(f"summary: waves={s['waves']} p50={s['p50_ms']:.2f}ms "
+              f"p95={s['p95_ms']:.2f}ms rows/s={s['rows_per_s']:.0f} "
+              f"psum_bytes_total={s['comm_bytes_total']} "
+              f"compiles={s['compile_count']}")
+    else:   # --autotune --rounds 1: the retuned server saw no traffic yet
+        print(f"summary: no waves served since the bucket retune "
+              f"(compiles={server.compile_count})")
+    # the compile-once contract, per autotune epoch: compile_count must not
+    # have grown past the last warmup's bucket set
+    assert server.compile_count == len(server.buckets), \
+        "recompiled after warmup!"
 
 
 if __name__ == "__main__":

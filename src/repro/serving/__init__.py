@@ -7,26 +7,36 @@ servable system, in three pieces:
     mostly dead slots, so the membership mask, its single psum, and the vote
     contraction are gathered over live leaves (bit-identical outputs — the
     intersection semantics do not change, only which columns are carried).
-  * ``engine`` — ForestServer: bucket / pad / compile-once.  Traffic arrives
+  * ``engine`` — bucket / pad / compile-once / async waves.  Traffic arrives
     in arbitrary batch sizes; the server pads each request up to a small set
     of row buckets (default 32/256/2048) and AOT-compiles one executable per
     bucket, so steady-state serving never recompiles (``compile_count`` is
-    the proof).  Oversized requests run as micro-batched waves of the
-    largest bucket; per-wave latency/throughput/psum-bytes land in
-    ``wave_stats``.  Execution is the same SPMD protocol as training:
-    ``run_simulated`` (vmap) on one host, or shard_map over a
-    (trees, parties) mesh with the ``aggregate=False`` per-tree hook and the
-    forest vote as the caller-side cross-shard reduction.
+    the proof).  Waves dispatch asynchronously through a bounded in-flight
+    ring (``max_inflight``): host binning/coalescing/padding of wave i+1
+    overlaps device execution of wave i, bit-identically to the sync path.
+    One ``ModelServer`` core serves every family — ``ForestServer`` (the
+    paper's one-round protocol), ``BoostingServer``, ``LinearServer`` —
+    behind ``Federation.serve``'s dispatch.  Execution is the same SPMD
+    protocol as training: ``run_simulated`` (vmap) on one host, or shard_map
+    over a (trees, parties) mesh with the ``aggregate=False`` per-tree hook
+    and the forest vote as the caller-side cross-shard reduction.
+  * ``autotune`` — bucket sets learned from observed traffic (wave /
+    request row-count quantiles) instead of hardcoded guesses; the
+    compile-once contract holds per autotune epoch.
   * ``queue``  — RequestQueue: continuous micro-batching.  Pending requests
     coalesce into waves across request boundaries (many small requests share
-    one launch; a huge one spans several), like launch/serve.py's slot-based
-    batching for the transformer decode path.
+    one launch; a huge one spans several), pumped two-phase through the
+    async ring, like launch/serve.py's slot-based batching for the
+    transformer decode path.
 
 Entry points: ``Federation.serve`` (the session API — pre-binds the mesh and
 keeps the LeafTable plan fresh across model updates),
 ``launch/serve_forest.py`` (CLI traffic driver) and
 ``benchmarks/serving_bench.py`` (dense vs leaf-compacted rows/s, p50/p95).
 """
-from repro.serving.engine import ForestServer, load_forest_trees  # noqa: F401
+from repro.serving.autotune import autotune_buckets, observed_row_counts  # noqa: F401
+from repro.serving.engine import (BoostingServer, ForestServer,  # noqa: F401
+                                  InFlightWave, LinearServer, ModelServer,
+                                  load_forest_trees, server_for)
 from repro.serving.plan import LeafTable, build_leaf_table  # noqa: F401
 from repro.serving.queue import RequestQueue  # noqa: F401

@@ -1,4 +1,4 @@
-"""ForestServer — compile-once, bucketed federated forest inference engine.
+"""Serving engines — compile-once, bucketed, async-wave federated inference.
 
 Serving traffic arrives in arbitrary batch sizes; jit'd XLA executables want
 static shapes.  The engine bridges the two the same way launch/serve.py does
@@ -12,23 +12,35 @@ for the transformer path:
   * oversized requests are chopped into waves of the largest bucket
     (micro-batching); per-wave latency / rows-per-second / psum payload bytes
     are recorded in ``wave_stats``;
-  * the prediction program is the paper's one-round protocol, SPMD over the
-    party axis, built by repro.federation.programs against the server's
-    Substrate — SimulatedSubstrate (vmap, single host) or ShardedSubstrate
-    (shard_map over a (trees, parties) mesh, with the ``aggregate=False``
-    per-tree hook and the forest vote as the cross-shard reduction);
-  * with ``compact=True`` (default) a ``LeafTable`` (plan.py) switches the
-    kernel to the leaf-compacted membership mask — bit-identical outputs,
-    psum and vote shrunk from ``n_nodes`` to live-leaf columns.
+  * waves execute **asynchronously**: ``dispatch_wave`` launches an
+    executable and returns an :class:`InFlightWave` handle without blocking
+    (JAX async dispatch), ``collect`` blocks on the oldest handle, records
+    its stats and strips padding.  ``serve_binned`` keeps a bounded ring of
+    at most ``max_inflight`` waves in flight (backpressure: the ring must
+    drain before more dispatch), so host-side padding/coalescing of wave
+    ``i+1`` overlaps device execution of wave ``i`` — bit-identical to the
+    sync path (``max_inflight=1``), same executables in the same order;
+  * label decode (crypto.py) is applied in exactly one layer — ``collect`` —
+    so ``serve``, ``serve_binned`` and the RequestQueue all return decoded
+    outputs with one consistent dtype, including zero-row requests
+    (``empty_result``).
+
+``ForestServer`` is the paper's one-round protocol (§4.2); with
+``compact=True`` (default) a ``LeafTable`` (plan.py) switches the kernel to
+the leaf-compacted membership mask.  ``BoostingServer`` and ``LinearServer``
+put federated gradient boosting and the F-LR baseline behind the *same*
+bucketed async engine — ``Federation.serve`` dispatches on the model family.
 
 Prefer building servers through ``Federation.serve`` — the session pre-binds
-its mesh and keeps the LeafTable plan fresh across model updates.
+its mesh, keeps plans fresh across model updates, and can autotune the
+bucket set from observed traffic (serving/autotune.py).
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import time
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +77,306 @@ def load_forest_trees(ckpt_dir: str, step: int | None = None) -> PartyTree:
     return PartyTree(*(jnp.asarray(flat[k]) for k in keys))
 
 
-class ForestServer:
+@dataclasses.dataclass
+class InFlightWave:
+    """Handle for a dispatched, not-yet-collected wave.
+
+    ``out`` is the executable's raw output — still a device future under JAX
+    async dispatch; nothing has blocked on it yet.  ``collect`` resolves it.
+    """
+
+    out: Any
+    bucket: int
+    n_rows: int
+    t0: float
+    inflight_at_dispatch: int = 1
+
+
+class ModelServer:
+    """Bucket / pad / compile-once / async-wave machinery, model-agnostic.
+
+    Subclasses bind a model family by implementing:
+      * ``_program()``     — the substrate-specialized predict closure;
+      * ``_wave_args(xbt)``— the full ordered argument tuple for one wave
+                             (model state + the padded request rows + any
+                             shared args, in the program's order);
+      * ``_prep(x_raw)``   — raw request rows -> (M, n, Fp) party rows;
+      * ``_raw_out_dtype()``, ``_request_dtype()``, ``_wave_comm_bytes(b)``.
+
+    The generic layer owns bucketing, AOT compilation, the in-flight ring,
+    decode, padding strip, stats, and bucket retuning.
+    """
+
+    def _init_engine(self, *, buckets, mesh=None, partition=None,
+                     decode: Callable | None = None, max_inflight: int = 1,
+                     n_features_per_party: int | None = None) -> None:
+        self.buckets = self._check_buckets(buckets)
+        self.substrate = (ShardedSubstrate(mesh) if mesh is not None
+                          else SimulatedSubstrate())
+        self.mesh = mesh
+        self.partition = partition
+        self.decode = decode
+        if int(max_inflight) < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self.max_inflight = int(max_inflight)
+        self.compile_count = 0
+        # bounded: a long-running server must not leak one dict per wave
+        self.wave_stats: collections.deque = collections.deque(maxlen=4096)
+        self._exec: dict[int, Callable] = {}
+        self._request_fp = n_features_per_party
+        self._n_inflight = 0
+
+    @staticmethod
+    def _check_buckets(buckets) -> tuple[int, ...]:
+        buckets = tuple(int(b) for b in buckets) if buckets else ()
+        if not buckets or list(buckets) != sorted(set(buckets)):
+            raise ValueError(f"buckets must be ascending/unique: {buckets}")
+        return buckets
+
+    # ------------------------------------------------------- family hooks
+    def _program(self):
+        raise NotImplementedError
+
+    def _wave_args(self, xbt) -> tuple:
+        raise NotImplementedError
+
+    def _prep(self, x_raw: np.ndarray) -> np.ndarray:
+        """Raw request rows -> (M, n, Fp) party rows.  The binned-tree
+        default: bin + partition through the fit-time VerticalPartition."""
+        if self.partition is None:
+            raise ValueError("raw-row serving needs a VerticalPartition")
+        return self.partition.bin_test(x_raw)
+
+    def _raw_out_dtype(self):
+        raise NotImplementedError
+
+    def _request_dtype(self):
+        return jnp.uint8
+
+    def _wave_comm_bytes(self, bucket: int) -> int:
+        return 0
+
+    # ------------------------------------------------------- compile layer
+    def _executable(self, bucket: int):
+        if bucket in self._exec:
+            return self._exec[bucket]
+        xbt = jnp.zeros((self.n_parties, bucket, self._fp()),
+                        self._request_dtype())
+        fn = self._program()
+        with self.substrate.context():
+            compiled = jax.jit(fn).lower(*self._wave_args(xbt)).compile()
+        self.compile_count += 1
+        self._exec[bucket] = compiled
+        return compiled
+
+    def warmup(self) -> "ModelServer":
+        """Pre-lower + compile every bucket (the compile-once contract)."""
+        for b in self.buckets:
+            self._executable(b)
+        return self
+
+    def set_buckets(self, buckets) -> "ModelServer":
+        """Retune the bucket set (serving/autotune.py drives this).
+
+        Executables for buckets that survive the retune are kept — the
+        compile-once contract holds *per autotune epoch*: after a retune +
+        ``warmup()``, ``compile_count`` grows only by the genuinely new
+        buckets and then stops again."""
+        buckets = self._check_buckets(buckets)
+        self._exec = {b: e for b, e in self._exec.items() if b in buckets}
+        self.buckets = buckets
+        return self
+
+    def _fp(self) -> int:
+        """Per-party (padded) feature width of request rows."""
+        bound = self._bound_fp()
+        if bound is None:
+            raise ValueError(
+                "feature width unknown: pass n_features_per_party / a "
+                "partition, or serve a binned batch before warmup()")
+        return bound
+
+    def _bound_fp(self) -> int | None:
+        if self.partition is not None:
+            return int(self.partition.feat_gid.shape[1])
+        return None if self._request_fp is None else int(self._request_fp)
+
+    def _check_fp(self, fp: int) -> None:
+        """Reject rows whose per-party width disagrees with the width the
+        compiled executables were (or will be) specialized for — an opaque
+        XLA shape error mid-wave otherwise."""
+        bound = self._bound_fp()
+        if bound is None:
+            self._request_fp = int(fp)
+        elif int(fp) != bound:
+            raise ValueError(
+                f"request rows have per-party feature width {fp} but this "
+                f"server is bound to width {bound} (bucket executables are "
+                f"shape-specialized; re-bin through the server's partition "
+                f"or stand up a server for the new width)")
+
+    # ---------------------------------------------------------- wave layer
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def dispatch_wave(self, xb_parts: np.ndarray) -> InFlightWave:
+        """Launch one wave without blocking on its result.
+
+        ``xb_parts`` is (M, n, Fp) with ``0 < n <= buckets[-1]``; the rows
+        are padded to the wave's bucket and handed to the AOT executable.
+        JAX dispatch is asynchronous, so this returns as soon as the launch
+        is enqueued — host work for the next wave (binning, coalescing,
+        padding) overlaps device execution of this one."""
+        xb_parts = np.asarray(xb_parts)
+        m, n, fp = xb_parts.shape
+        if m != self.n_parties:
+            raise ValueError(f"expected {self.n_parties} parties, got {m}")
+        if not 0 < n <= self.buckets[-1]:
+            raise ValueError(
+                f"wave of {n} rows: must be in (0, {self.buckets[-1]}] — "
+                f"chop oversized requests into waves (serve_binned does)")
+        self._check_fp(fp)
+        bucket = self._bucket_for(n)
+        compiled = self._executable(bucket)
+        if n < bucket:
+            xb_parts = np.pad(xb_parts, ((0, 0), (0, bucket - n), (0, 0)))
+        t0 = time.perf_counter()
+        out = compiled(*self._wave_args(jnp.asarray(xb_parts)))
+        self._n_inflight += 1
+        return InFlightWave(out=out, bucket=bucket, n_rows=n, t0=t0,
+                            inflight_at_dispatch=self._n_inflight)
+
+    def collect(self, wave: InFlightWave) -> np.ndarray:
+        """Block on a dispatched wave; record stats, strip padding, decode.
+
+        Under async dispatch ``latency_s`` spans launch -> ready, so for
+        waves that queued behind earlier in-flight work it includes queueing
+        time (``inflight_at_dispatch`` records the ring depth at launch)."""
+        out = jax.block_until_ready(wave.out)
+        dt = time.perf_counter() - wave.t0
+        self._n_inflight -= 1
+        self.wave_stats.append({
+            "bucket": wave.bucket, "n_rows": wave.n_rows,
+            "t0": wave.t0, "latency_s": dt,
+            "rows_per_s": wave.n_rows / max(dt, 1e-12),
+            "inflight": wave.inflight_at_dispatch,
+            "comm_bytes": self._wave_comm_bytes(wave.bucket),
+        })
+        return self._finalize(self._strip(out, wave.n_rows))
+
+    def abandon(self, waves) -> None:
+        """Collect-and-discard in-flight handles whose results are no longer
+        wanted (a failed pump discarding its ring).  Keeps the in-flight
+        counter honest — the waves did run — while suppressing their own
+        errors (the caller is already propagating the original one)."""
+        for wave in waves:
+            try:
+                self.collect(wave)
+            except Exception:                        # noqa: BLE001
+                pass
+
+    def _strip(self, out, n: int) -> np.ndarray:
+        """Master-side rows of a program output, padding stripped.
+
+        The aggregated serving programs produce exactly two shapes: ``(rows,)``
+        (sharded substrate — the cross-shard reduction already ran) or
+        ``(M, rows)`` (simulated substrate — a per-party stack whose row 0 is
+        the shared result).  Anything else (per-tree ``aggregate=False``
+        stacks, future multi-output programs) must not be sliced silently."""
+        out = np.asarray(out)
+        if out.ndim == 1:
+            return out[:n]
+        if out.ndim == 2 and out.shape[0] == self.n_parties:
+            return out[0, :n]
+        raise ValueError(
+            f"program output has unexpected shape {out.shape}: the serving "
+            f"path expects (rows,) (sharded, reduced) or "
+            f"({self.n_parties}, rows) (simulated party stack); per-tree / "
+            f"multi-output programs need their own collect handling")
+
+    def _finalize(self, out: np.ndarray) -> np.ndarray:
+        """Decode lives here, and only here (one layer for every caller)."""
+        return self.decode(out) if self.decode is not None else np.asarray(out)
+
+    def empty_result(self) -> np.ndarray:
+        """The zero-row result, produced by the same decode path as real
+        waves — so its dtype matches non-empty outputs for every task and
+        crypto setting (e.g. regression_unmasker promotes to float64)."""
+        return self._finalize(np.empty((0,), self._raw_out_dtype()))
+
+    # ---------------------------------------------------------- serve layer
+    def _serve_wave(self, xb_parts: np.ndarray) -> np.ndarray:
+        return self.collect(self.dispatch_wave(xb_parts))
+
+    def serve_binned(self, xb_parts: np.ndarray, *,
+                     max_inflight: int | None = None) -> np.ndarray:
+        """Serve pre-binned, pre-partitioned rows: (M, n, Fp) -> (n,).
+
+        Chops into waves of at most the largest bucket and pumps them
+        through the in-flight ring: up to ``max_inflight`` waves run on
+        device while the host pads the next ones; collection is FIFO, so
+        outputs are bit-identical to the sync path."""
+        xb_parts = np.asarray(xb_parts)
+        m, n, fp = xb_parts.shape
+        if m != self.n_parties:
+            raise ValueError(f"expected {self.n_parties} parties, got {m}")
+        if n == 0:                                    # empty batch: no wave
+            return self.empty_result()
+        k = self.max_inflight if max_inflight is None else max(1, max_inflight)
+        ring: collections.deque[InFlightWave] = collections.deque()
+        outs, lo = [], 0
+        try:
+            while lo < n or ring:
+                while lo < n and len(ring) < k:       # fill the ring
+                    hi = min(lo + self.buckets[-1], n)
+                    ring.append(self.dispatch_wave(xb_parts[:, lo:hi]))
+                    lo = hi
+                outs.append(self.collect(ring.popleft()))  # backpressure
+        except BaseException:
+            self.abandon(ring)                        # keep inflight honest
+            raise
+        return np.concatenate(outs) if len(outs) > 1 else outs[0]
+
+    def serve(self, x_test: np.ndarray) -> np.ndarray:
+        """Serve raw feature rows (n, F) — the family's _prep does the
+        partition/bin/standardize step; decode is applied per wave."""
+        return self.serve_binned(self._prep(np.asarray(x_test)))
+
+    # ------------------------------------------------------------ reporting
+    def stats_summary(self) -> dict:
+        """p50/p95 latency + aggregate throughput over recorded waves.
+
+        ``comm_bytes_total`` sums every recorded wave's psum payload, so it
+        stays honest under mixed-bucket traffic (per-wave values live in
+        ``wave_stats``)."""
+        if not self.wave_stats:
+            return {}
+        lat = np.array([w["latency_s"] for w in self.wave_stats])
+        rows = sum(w["n_rows"] for w in self.wave_stats)
+        # busy time = union of the [t0, t0+latency] wave intervals: async
+        # waves overlap by design, so summing latencies would double-count
+        # and understate throughput by ~max_inflight; idle gaps between
+        # traffic bursts don't count as busy either way
+        spans = sorted((w["t0"], w["t0"] + w["latency_s"])
+                       for w in self.wave_stats)
+        busy, end = 0.0, float("-inf")
+        for s, e in spans:
+            if e > end:
+                busy += e - max(s, end)
+                end = e
+        return {"waves": len(lat), "rows": rows,
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p95_ms": float(np.percentile(lat, 95) * 1e3),
+                "rows_per_s": rows / max(busy, 1e-12),
+                "comm_bytes_total": sum(w["comm_bytes"]
+                                        for w in self.wave_stats),
+                "compile_count": self.compile_count}
+
+
+class ForestServer(ModelServer):
     """Batched one-round prediction server over a fitted federated forest.
 
     Args:
@@ -79,6 +390,7 @@ class ForestServer:
         axes -> run_sharded party-SPMD x tree-sharded execution.
       partition: optional VerticalPartition for binning raw feature rows.
       decode: optional label decode applied to served outputs (crypto.py).
+      max_inflight: in-flight wave ring depth (1 = synchronous waves).
     """
 
     def __init__(self, trees: PartyTree, params: ForestParams, *,
@@ -86,26 +398,17 @@ class ForestServer:
                  compact: bool = True, mask_dtype=jnp.uint8,
                  vote_impl: str = "einsum", mesh=None,
                  partition=None, decode: Callable | None = None,
-                 leaf_pad_multiple: int = 8,
+                 leaf_pad_multiple: int = 8, max_inflight: int = 1,
                  n_features_per_party: int | None = None):
-        if not buckets or list(buckets) != sorted(set(buckets)):
-            raise ValueError(f"buckets must be ascending/unique: {buckets}")
         self.params = params
-        self.buckets = tuple(int(b) for b in buckets)
         self.compact = compact
         self.mask_dtype = mask_dtype
         self.vote_impl = vote_impl
-        self.mesh = mesh
-        self.substrate = (ShardedSubstrate(mesh) if mesh is not None
-                          else SimulatedSubstrate())
-        self.partition = partition
-        self.decode = decode
-        self.compile_count = 0
-        # bounded: a long-running server must not leak one dict per wave
-        self.wave_stats: collections.deque = collections.deque(maxlen=4096)
-        self._exec: dict[int, Callable] = {}
-        self._request_fp = n_features_per_party
         self._leaf_pad = leaf_pad_multiple
+        self._init_engine(
+            buckets=buckets, mesh=mesh, partition=partition, decode=decode,
+            max_inflight=max_inflight,
+            n_features_per_party=n_features_per_party)
         self.refresh(trees)
 
     # ------------------------------------------------------------ factories
@@ -117,6 +420,8 @@ class ForestServer:
         kw.setdefault("partition", forest.partition_)
         kw.setdefault("decode", forest._decode)
         return cls(forest.trees_, forest.params, **kw)
+
+    from_model = from_forest
 
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, params: ForestParams,
@@ -143,7 +448,18 @@ class ForestServer:
         return fed.serve(model, buckets=buckets, compact=compact,
                          server_cls=cls, **kw)
 
-    # ------------------------------------------------------- compile layer
+    # -------------------------------------------------------- model binding
+    @staticmethod
+    def model_token(model) -> tuple:
+        """Token of the model state a server was built from — object
+        entries compare by identity, value entries by equality
+        (session._token_matches); ``Federation.serve`` refreshes the cached
+        server when the token changes."""
+        return (model.trees_,)
+
+    def refresh_from(self, model) -> "ForestServer":
+        return self.refresh(model.trees_)
+
     def refresh(self, trees: PartyTree) -> "ForestServer":
         """(Re)bind the server to a PartyTree stack.
 
@@ -161,117 +477,182 @@ class ForestServer:
         self._exec = {}
         return self
 
+    # ------------------------------------------------------------ hooks
     def _program(self):
-        fn = programs.forest_predict_program(
+        return programs.forest_predict_program(
             self.substrate, self.params, compact=self.leaf_table is not None,
             mask_dtype=self.mask_dtype, vote_impl=self.vote_impl)
-        shared = () if self.leaf_table is None else (self.leaf_table.leaf_idx,)
-        return fn, shared
 
-    def _executable(self, bucket: int):
-        if bucket in self._exec:
-            return self._exec[bucket]
-        xbt = jnp.zeros((self.n_parties, bucket, self._fp()), jnp.uint8)
-        fn, shared = self._program()
-        args = (self.trees, xbt) + shared
-        with self.substrate.context():
-            compiled = jax.jit(fn).lower(*args).compile()
-        self.compile_count += 1
-        self._exec[bucket] = compiled
-        return compiled
-
-    def _fp(self) -> int:
-        """Per-party (padded) feature width of request rows."""
-        if self.partition is not None:
-            return int(self.partition.feat_gid.shape[1])
-        if self._request_fp is None:
-            raise ValueError(
-                "feature width unknown: pass n_features_per_party / a "
-                "partition, or serve a binned batch before warmup()")
-        return int(self._request_fp)
-
-    def warmup(self) -> "ForestServer":
-        """Pre-lower + compile every bucket (the compile-once contract)."""
-        for b in self.buckets:
-            self._executable(b)
-        return self
-
-    # ---------------------------------------------------------- serve layer
-    def _bucket_for(self, n: int) -> int:
-        for b in self.buckets:
-            if n <= b:
-                return b
-        return self.buckets[-1]
-
-    def serve_binned(self, xb_parts: np.ndarray) -> np.ndarray:
-        """Serve pre-binned, pre-partitioned rows: (M, n, Fp) uint8 -> (n,).
-
-        Chops into waves of at most the largest bucket, pads each wave to
-        its bucket, strips padding from the outputs."""
-        xb_parts = np.asarray(xb_parts)
-        m, n, fp = xb_parts.shape
-        if m != self.n_parties:
-            raise ValueError(f"expected {self.n_parties} parties, got {m}")
-        self._request_fp = fp
-        if n == 0:                                    # empty batch: no wave
-            dt = (np.int32 if self.params.task == "classification"
-                  else np.float32)
-            return np.empty((0,), dt)
-        outs = []
-        lo = 0
-        while lo < n:
-            hi = min(lo + self.buckets[-1], n)
-            outs.append(self._serve_wave(xb_parts[:, lo:hi]))
-            lo = hi
-        return np.concatenate(outs) if len(outs) > 1 else outs[0]
-
-    def serve(self, x_test: np.ndarray) -> np.ndarray:
-        """Serve raw feature rows (n, F) — requires a partition for binning."""
-        if self.partition is None:
-            raise ValueError("raw-row serving needs a VerticalPartition")
-        out = self.serve_binned(self.partition.bin_test(np.asarray(x_test)))
-        return self.decode(out) if self.decode is not None else out
-
-    def _serve_wave(self, xb_parts: np.ndarray) -> np.ndarray:
-        m, n, fp = xb_parts.shape
-        bucket = self._bucket_for(n)
-        compiled = self._executable(bucket)
-        if n < bucket:
-            xb_parts = np.pad(xb_parts, ((0, 0), (0, bucket - n), (0, 0)))
+    def _wave_args(self, xbt) -> tuple:
         shared = (() if self.leaf_table is None
                   else (self.leaf_table.leaf_idx,))
-        t0 = time.perf_counter()
-        out = compiled(self.trees, jnp.asarray(xb_parts), *shared)
-        out = jax.block_until_ready(out)
-        dt = time.perf_counter() - t0
+        return (self.trees, xbt) + shared
+
+    def _raw_out_dtype(self):
+        return (np.int32 if self.params.task == "classification"
+                else np.float32)
+
+    def _wave_comm_bytes(self, bucket: int) -> int:
         n_cols = (self.params.n_nodes if self.leaf_table is None
                   else self.leaf_table.capacity)
-        n_trees = int(self.trees.is_leaf.shape[1])    # actual stack, not
-        self.wave_stats.append({                      # params (fit_resumable
-            "bucket": bucket, "n_rows": n,            # chunks can be partial)
-            "latency_s": dt,
-            "rows_per_s": n / max(dt, 1e-12),
-            "comm_bytes": prediction.mask_comm_bytes(
-                n_trees, bucket, n_cols, self.mask_dtype),
-        })
-        out = np.asarray(out)
-        return out[0][:n] if out.ndim > 1 else out[:n]
+        n_trees = int(self.trees.is_leaf.shape[1])   # actual stack, not
+        return prediction.mask_comm_bytes(           # params (fit_resumable
+            n_trees, bucket, n_cols, self.mask_dtype)  # chunks can be partial)
 
-    # ------------------------------------------------------------ reporting
-    def stats_summary(self) -> dict:
-        """p50/p95 latency + aggregate throughput over recorded waves.
 
-        ``comm_bytes_total`` sums every recorded wave's psum payload, so it
-        stays honest under mixed-bucket traffic (per-wave values live in
-        ``wave_stats``)."""
-        if not self.wave_stats:
-            return {}
-        lat = np.array([w["latency_s"] for w in self.wave_stats])
-        rows = sum(w["n_rows"] for w in self.wave_stats)
-        return {"waves": len(lat), "rows": rows,
-                "p50_ms": float(np.percentile(lat, 50) * 1e3),
-                "p95_ms": float(np.percentile(lat, 95) * 1e3),
-                "rows_per_s": rows / max(float(lat.sum()), 1e-12),
-                "comm_bytes_total": sum(w["comm_bytes"]
-                                        for w in self.wave_stats),
-                "compile_count": self.compile_count}
+class BoostingServer(ModelServer):
+    """Bucketed async serving for federated gradient boosting.
+
+    The per-round trees (each a T=1 PartyTree) are stacked along the tree
+    axis and served through ONE substrate-specialized program: the paper's
+    one-round membership protocol with ``aggregate=False`` per-round outputs
+    and the boosting reduction (base + lr * Σ rounds, thresholded for the
+    binary task) fused in-program — so one wave = one collective for the
+    whole ensemble, exactly like the forest path.  Leaf compaction applies
+    unchanged (per-round trees are ordinary PartyTrees)."""
+
+    def __init__(self, trees: list, base: float, params, *,
+                 buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 compact: bool = True, mask_dtype=jnp.uint8, mesh=None,
+                 partition=None, leaf_pad_multiple: int = 8,
+                 max_inflight: int = 1,
+                 n_features_per_party: int | None = None):
+        self.params = params                     # BoostParams
+        self.compact = compact
+        self.mask_dtype = mask_dtype
+        self._leaf_pad = leaf_pad_multiple
+        self._init_engine(
+            buckets=buckets, mesh=mesh, partition=partition, decode=None,
+            max_inflight=max_inflight,
+            n_features_per_party=n_features_per_party)
+        self._rebind(trees, base)
+
+    @classmethod
+    def from_model(cls, model, **kw) -> "BoostingServer":
+        """Wrap a fitted core.boosting.FederatedBoosting."""
+        if not model.trees_:
+            raise ValueError("fit the boosting model first")
+        kw.pop("decode", None)                   # boosting has no crypto decode
+        kw.setdefault("partition", getattr(model, "_partition", None))
+        return cls(model.trees_, model.base_, model.params, **kw)
+
+    @staticmethod
+    def model_token(model) -> tuple:
+        t = model.trees_
+        return (t, len(t), t[-1] if t else None, float(model.base_))
+
+    def refresh_from(self, model) -> "BoostingServer":
+        return self._rebind(model.trees_, model.base_)
+
+    def _rebind(self, trees: list, base: float) -> "BoostingServer":
+        from repro.core.boosting import stack_rounds
+        self.trees = stack_rounds(trees)         # (M, R, ...) PartyTree
+        self.base = jnp.asarray(base, jnp.float32)
+        self.n_parties = int(self.trees.is_leaf.shape[0])
+        self.leaf_table = (plan.build_leaf_table(
+            self.trees, self.params.tree_params(),
+            pad_multiple=self._leaf_pad) if self.compact else None)
+        self._exec = {}
+        return self
+
+    def _program(self):
+        return programs.boosting_predict_program(
+            self.substrate, self.params,
+            compact=self.leaf_table is not None, mask_dtype=self.mask_dtype)
+
+    def _wave_args(self, xbt) -> tuple:
+        shared = (() if self.leaf_table is None
+                  else (self.leaf_table.leaf_idx,))
+        return (self.trees, xbt, self.base) + shared
+
+    def _raw_out_dtype(self):
+        return np.int32 if self.params.task == "binary" else np.float32
+
+    def _wave_comm_bytes(self, bucket: int) -> int:
+        n_cols = (self.params.tree_params().n_nodes if self.leaf_table is None
+                  else self.leaf_table.capacity)
+        n_rounds = int(self.trees.is_leaf.shape[1])
+        return prediction.mask_comm_bytes(n_rounds, bucket, n_cols,
+                                          self.mask_dtype)
+
+
+class LinearServer(ModelServer):
+    """Bucketed async serving for the F-LR baseline.
+
+    Request rows are split into per-party raw blocks, standardized with the
+    fit-time moments and served through the single-psum joint-logit program
+    — float32 party rows instead of binned uint8, everything else (buckets,
+    AOT compile-once, the in-flight ring) identical to the tree engines."""
+
+    def __init__(self, model, *, buckets: tuple[int, ...] = DEFAULT_BUCKETS,
+                 mesh=None, max_inflight: int = 1):
+        self.model = model                       # fitted FederatedLinear
+        self.task = model.task
+        self._init_engine(
+            buckets=buckets, mesh=mesh,
+            partition=getattr(model, "_partition", None), decode=None,
+            max_inflight=max_inflight)
+        self._rebind(model)
+
+    @classmethod
+    def from_model(cls, model, **kw) -> "LinearServer":
+        if getattr(model, "_w", None) is None:
+            raise ValueError("fit the F-LR model first")
+        kw.pop("decode", None)
+        kw.pop("compact", None)                  # no heap to compact
+        kw.pop("partition", None)                # the model owns its split
+        return cls(model, **kw)
+
+    @staticmethod
+    def model_token(model) -> tuple:
+        return (model._w,)
+
+    def refresh_from(self, model) -> "LinearServer":
+        return self._rebind(model)
+
+    def _rebind(self, model) -> "LinearServer":
+        self.model = model
+        self.w = jnp.asarray(model._w)           # (M, Fmax) party blocks
+        b = jnp.asarray(model._b)
+        self.b = b[0] if b.ndim else b           # psum'd: identical per party
+        self.n_parties = int(self.w.shape[0])
+        self._exec = {}
+        return self
+
+    def _program(self):
+        return programs.linear_predict_program(self.substrate, self.task)
+
+    def _wave_args(self, xbt) -> tuple:
+        return (xbt, self.w, self.b)
+
+    def _prep(self, x_raw: np.ndarray) -> np.ndarray:
+        return self.model._standardized(self.model._blocks(x_raw))
+
+    def _bound_fp(self) -> int | None:
+        return int(self.w.shape[-1])             # fit-time padded width
+
+    def _request_dtype(self):
+        return jnp.float32
+
+    def _raw_out_dtype(self):
+        return np.int32 if self.task == "classification" else np.float32
+
+
+def server_for(model) -> type[ModelServer]:
+    """The engine class serving a fitted model's family — the dispatch
+    behind ``Federation.serve`` (a thin ModelServer dispatch over the
+    Estimator protocol)."""
+    from repro.core.boosting import FederatedBoosting
+    from repro.core.fedlinear import FederatedLinear
+    from repro.core.forest import FederatedForest
+    if isinstance(model, FederatedForest):
+        return ForestServer
+    if isinstance(model, FederatedBoosting):
+        return BoostingServer
+    if isinstance(model, FederatedLinear):
+        return LinearServer
+    if hasattr(model, "trees_") and hasattr(getattr(model, "trees_", None),
+                                            "is_leaf"):
+        return ForestServer                      # duck-typed forest handle
+    raise TypeError(f"no serving engine for model family "
+                    f"{type(model).__name__}")

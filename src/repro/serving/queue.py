@@ -1,11 +1,20 @@
-"""Request queue with continuous micro-batching over a ForestServer.
+"""Request queue with continuous micro-batching over a serving engine.
 
 Requests of arbitrary row counts are enqueued; ``drain()`` coalesces pending
 rows into waves (many small requests share one executable launch; a huge
-request spans several), serves them through the engine's bucketed,
-compile-once path, and scatters each wave's outputs back to the requests it
-carried — the forest analogue of launch/serve.py's slot-based continuous
-batching for the transformer decode loop.
+request spans several) and pumps them through the engine's bucketed,
+compile-once path as a **two-phase async pipeline**: fill the bounded
+in-flight ring (``dispatch_wave`` — non-blocking, JAX async dispatch), then
+collect the oldest wave, scatter its outputs back to the requests it carried
+and refill.  While a wave executes on device, the host is coalescing and
+padding the next ones — the forest analogue of launch/serve.py's slot-based
+continuous batching for the transformer decode loop.  With
+``server.max_inflight == 1`` the pump degenerates to the synchronous
+dispatch/collect sequence, bit-identically.
+
+Decode is the engine's job (``collect``), so results arrive here already in
+their final dtype — including zero-row requests, which retire with the
+engine's ``empty_result()`` instead of a locally fabricated array.
 """
 from __future__ import annotations
 
@@ -15,22 +24,37 @@ import time
 
 import numpy as np
 
-from repro.serving.engine import ForestServer
+from repro.serving.engine import ModelServer
 
 
 @dataclasses.dataclass
 class _Pending:
     rid: int
-    xb_parts: np.ndarray        # (M, n, Fp) binned party rows
+    x: np.ndarray               # raw (n, F) rows, or binned (M, n, Fp)
+    binned: bool
     t_submit: float
-    done: int = 0               # rows already served
+    sent: int = 0               # rows dispatched into in-flight waves
+    done: int = 0               # rows collected + scattered back
     out: np.ndarray | None = None
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.x.shape[1] if self.binned else self.x.shape[0])
+
+    def party_rows(self, server: ModelServer, start: int,
+                   take: int) -> np.ndarray:
+        """(M, take, Fp) party rows for one span — raw requests bin HERE,
+        inside the pump, so binning of wave i+1 overlaps device execution
+        of wave i instead of serializing at submit time."""
+        if self.binned:
+            return self.x[:, start:start + take]
+        return server._prep(self.x[start:start + take])
 
 
 class RequestQueue:
-    """FIFO queue of prediction requests over one ForestServer."""
+    """FIFO queue of prediction requests over one serving engine."""
 
-    def __init__(self, server: ForestServer, max_wave_rows: int | None = None):
+    def __init__(self, server: ModelServer, max_wave_rows: int | None = None):
         self.server = server
         self.max_wave_rows = max_wave_rows or server.buckets[-1]
         self._pending: list[_Pending] = []
@@ -39,60 +63,102 @@ class RequestQueue:
         self.request_stats: collections.deque = collections.deque(maxlen=4096)
 
     def submit(self, x: np.ndarray, *, binned: bool = False) -> int:
-        """Enqueue one request; returns its id (resolved by drain())."""
+        """Enqueue one request; returns its id (resolved by drain()).
+
+        Raw requests are NOT binned here — binning happens span-by-span in
+        the drain pump, overlapped with in-flight device execution.  Binned
+        requests are shape-validated up front, so one bad request can't
+        poison the pump for everything queued behind it."""
+        x = np.asarray(x)
         if binned:
-            xb = np.asarray(x)
-        else:
-            if self.server.partition is None:
-                raise ValueError("raw submit needs a server partition")
-            xb = self.server.partition.bin_test(np.asarray(x))
-        p = _Pending(self._next_id, xb, time.perf_counter())
+            if x.ndim != 3 or x.shape[0] != self.server.n_parties:
+                raise ValueError(
+                    f"binned request must be ({self.server.n_parties}, "
+                    f"rows, Fp), got {x.shape}")
+            self.server._check_fp(x.shape[2])
+        p = _Pending(self._next_id, x, bool(binned), time.perf_counter())
         self._pending.append(p)
         self._next_id += 1
         return p.rid
 
+    def _next_wave(self):
+        """Coalesce the next wave across request boundaries (host phase).
+
+        Returns ((M, rows, Fp) array, [(pending, start, take), ...]) or
+        (None, None) when every pending row is already in flight."""
+        cap = min(self.max_wave_rows, self.server.buckets[-1])
+        wave, spans, rows = [], [], 0
+        for p in self._pending:
+            remaining = p.n_rows - p.sent
+            if remaining == 0:          # fully dispatched (or zero-row)
+                continue
+            take = min(remaining, cap - rows)
+            if take == 0:               # wave is full
+                break
+            wave.append(p.party_rows(self.server, p.sent, take))
+            spans.append((p, p.sent, take))
+            p.sent += take
+            rows += take
+        if not wave:
+            return None, None
+        return np.concatenate(wave, axis=1), spans
+
+    def _scatter(self, out: np.ndarray, spans) -> None:
+        """Write one collected wave's (decoded) rows back to its requests."""
+        lo = 0
+        for p, start, take in spans:
+            seg = out[lo:lo + take]
+            if p.out is None:
+                p.out = np.empty(p.n_rows, seg.dtype)
+            p.out[start:start + take] = seg
+            p.done += take
+            lo += take
+
+    def _retire(self, results: dict[int, np.ndarray]) -> None:
+        still = []
+        for p in self._pending:
+            if p.done == p.n_rows:
+                if p.out is None:       # zero-row request: engine dtype
+                    p.out = self.server.empty_result()
+                results[p.rid] = p.out
+                self.request_stats.append({
+                    "rid": p.rid, "rows": int(p.done),
+                    "latency_s": time.perf_counter() - p.t_submit})
+            else:
+                still.append(p)
+        self._pending = still
+
     def drain(self) -> dict[int, np.ndarray]:
-        """Serve everything pending; returns {request_id: predictions}."""
+        """Serve everything pending; returns {request_id: predictions}.
+
+        Two-phase pump: (1) fill the in-flight ring with coalesced waves —
+        each ``dispatch_wave`` returns without blocking; (2) collect the
+        oldest wave, scatter its rows, retire finished requests, refill.
+        The ring bound (``server.max_inflight``) is the backpressure: at
+        most K waves of host memory + device work are ever outstanding."""
         results: dict[int, np.ndarray] = {}
-        while self._pending:
-            # ---- coalesce the next wave across request boundaries --------
-            wave, spans, rows = [], [], 0
-            for p in self._pending:
-                remaining = p.xb_parts.shape[1] - p.done
-                if remaining == 0:          # zero-row request: retire below
-                    continue
-                take = min(remaining, self.max_wave_rows - rows)
-                if take == 0:               # wave is full
+        ring: collections.deque = collections.deque()
+        k = self.server.max_inflight
+        try:
+            while True:
+                while len(ring) < k:                # phase 1: fill
+                    wave, spans = self._next_wave()
+                    if wave is None:
+                        break
+                    ring.append((self.server.dispatch_wave(wave), spans))
+                if not ring:                        # nothing in flight:
+                    self._retire(results)           # zero-row stragglers
                     break
-                wave.append(p.xb_parts[:, p.done:p.done + take])
-                spans.append((p, p.done, take))
-                rows += take
-            if wave:
-                out = self.server.serve_binned(np.concatenate(wave, axis=1))
-                lo = 0
-                for p, start, take in spans:
-                    seg = out[lo:lo + take]
-                    if p.out is None:
-                        p.out = np.empty(p.xb_parts.shape[1], seg.dtype)
-                    p.out[start:start + take] = seg
-                    p.done += take
-                    lo += take
-            # ---- retire completed requests -------------------------------
-            still = []
+                handle, spans = ring.popleft()      # phase 2: collect
+                self._scatter(self.server.collect(handle), spans)
+                self._retire(results)
+        except BaseException:
+            # a failed dispatch/collect discards the local ring: drain the
+            # already-launched waves (keeps the server's in-flight counter
+            # honest) and make dispatched-but-unserved rows eligible for
+            # re-dispatch, or the next drain() silently strands them
+            self.server.abandon(handle for handle, _ in ring)
             for p in self._pending:
-                if p.done == p.xb_parts.shape[1]:
-                    if p.out is None:       # zero-row request
-                        dt = (np.int32 if self.server.params.task
-                              == "classification" else np.float32)
-                        p.out = np.empty((0,), dt)
-                    out_p = p.out
-                    if self.server.decode is not None:
-                        out_p = self.server.decode(out_p)
-                    results[p.rid] = out_p
-                    self.request_stats.append({
-                        "rid": p.rid, "rows": int(p.done),
-                        "latency_s": time.perf_counter() - p.t_submit})
-                else:
-                    still.append(p)
-            self._pending = still
+                p.sent = p.done
+            raise
         return results

@@ -228,6 +228,82 @@ def test_serve_refreshes_server_when_trees_change(cls_data, tmp_path):
     assert server.compile_count > 2                       # old execs dropped
 
 
+# ---------------------------------------------------- serving, all families
+def test_serve_boosting_model(reg_data):
+    """fed.serve stands up the bucketed async engine for boosting — same
+    compile-once contract, outputs match the estimator's predict."""
+    rxtr, rytr, rxte, _ = reg_data
+    fed = Federation(parties=2, n_bins=16)
+    fed.ingest(rxtr, rytr)
+    model = fed.fit(BoostParams(n_rounds=4, max_depth=3, n_bins=16))
+    server = fed.serve(model, buckets=(32, 64), max_inflight=3)
+    assert fed.serve(model, buckets=(32, 64), max_inflight=3) is server
+    server.warmup()
+    assert server.compile_count == 2
+    out = server.serve(rxte)
+    # one fused float32 program vs the per-round float64 host accumulation:
+    # same ensemble, summation order differs
+    np.testing.assert_allclose(out, model.predict(rxte), rtol=1e-4,
+                               atol=1e-4)
+    assert server.compile_count == 2                      # no recompiles
+    # zero-row dtype matches, through the same engine path
+    assert server.serve(rxte[:0]).dtype == out.dtype
+
+
+def test_serve_boosting_binary(cls_data):
+    xtr, ytr, xte, _ = cls_data
+    fed = Federation(parties=2, n_bins=16)
+    fed.ingest(xtr, (ytr == 1).astype(np.float64))
+    model = fed.fit(BoostParams(task="binary", n_rounds=3, max_depth=3,
+                                n_bins=16))
+    server = fed.serve(model, buckets=(64,))
+    np.testing.assert_array_equal(server.serve(xte),
+                                  model.predict(xte).astype(np.int32))
+
+
+def test_serve_linear_model(cls_data):
+    """fed.serve works for F-LR: raw rows split/standardized per party and
+    served through the same bucketed engine."""
+    from repro.serving import LinearServer, RequestQueue
+    xtr, ytr, xte, _ = cls_data
+    fed = Federation(parties=3)
+    part = fed.ingest(xtr, ytr)
+    model = fed.fit(LinearParams(steps=150))
+    server = fed.serve(model, buckets=(32, 128))
+    assert isinstance(server, LinearServer)
+    server.warmup()
+    assert server.compile_count == 2
+    want = model.predict(part.split_raw(xte))
+    np.testing.assert_array_equal(server.serve(xte), want)
+    assert server.compile_count == 2
+    # queue traffic over the linear engine too
+    q = RequestQueue(server)
+    rid = q.submit(xte[:40])
+    np.testing.assert_array_equal(q.drain()[rid], want[:40])
+
+
+def test_serve_autotune_refreshes_buckets(cls_data):
+    """serve(autotune_buckets=True) derives the bucket set from traffic and
+    refreshes the cached server in place, keeping compile-once per epoch."""
+    xtr, ytr, xte, _ = cls_data
+    p = ForestParams(n_estimators=2, max_depth=4, n_bins=8, n_classes=3,
+                     seed=9)
+    fed = Federation(parties=2, n_bins=8)
+    fed.ingest(xtr, ytr)
+    model = fed.fit(p)
+    counts = list(np.random.default_rng(0).integers(1, 120, size=50))
+    server = fed.serve(model, autotune_buckets=True, traffic=counts)
+    server.warmup()
+    assert server.buckets[-1] >= max(counts)
+    assert server.compile_count == len(server.buckets)
+    for n in (3, 40, 100):
+        np.testing.assert_array_equal(server.serve(xte[:n]),
+                                      model.predict(xte[:n]))
+    assert server.compile_count == len(server.buckets)    # epoch stability
+    # next epoch reuses the same cached server (wave_stats-driven retune)
+    assert fed.serve(model, autotune_buckets=True) is server
+
+
 # ------------------------------------------------------------- checkpoints
 def test_session_save_load_roundtrip(cls_data, tmp_path):
     """fed.save -> fed.load rehydrates a servable model, reconstructing the
@@ -244,6 +320,58 @@ def test_session_save_load_roundtrip(cls_data, tmp_path):
     np.testing.assert_array_equal(restored.predict(xte), model.predict(xte))
     np.testing.assert_array_equal(fed.predict(restored, xte),
                                   fed.predict(model, xte))
+
+
+def test_save_load_model_family_tag(reg_data, tmp_path):
+    """A saved boosting stack must never silently reload as a forest: save
+    tags the family, load dispatches on it and rejects mismatches."""
+    rxtr, rytr, rxte, _ = reg_data
+    fed = Federation(parties=2, n_bins=16)
+    fed.ingest(rxtr, rytr)
+    model = fed.fit(BoostParams(n_rounds=3, max_depth=3, n_bins=16))
+    d = str(tmp_path / "boost")
+    fed.save(model, d)
+
+    with pytest.raises(ValueError, match="boosting"):
+        fed.load(d, ForestParams(task="regression", n_estimators=3,
+                                 n_bins=16))
+    with pytest.raises(ValueError, match="task"):
+        fed.load(d, BoostParams(task="binary", n_rounds=3, max_depth=3,
+                                n_bins=16))
+
+    restored = fed.load(d, BoostParams(n_rounds=3, max_depth=3, n_bins=16))
+    assert restored.base_ == model.base_
+    assert len(restored.trees_) == len(model.trees_)
+    np.testing.assert_allclose(restored.predict(rxte), model.predict(rxte),
+                               rtol=1e-6)
+    # and the restored handle serves through the same engine
+    server = fed.serve(restored, buckets=(64,))
+    np.testing.assert_allclose(server.serve(rxte), model.predict(rxte),
+                               rtol=1e-4, atol=1e-4)
+
+    # the reverse mismatch: a forest checkpoint refuses BoostParams
+    fmodel = fed.fit(ForestParams(task="regression", n_estimators=2,
+                                  max_depth=3, n_bins=16))
+    d2 = str(tmp_path / "forest")
+    fed.save(fmodel, d2)
+    with pytest.raises(ValueError, match="forest"):
+        fed.load(d2, BoostParams(n_rounds=2, n_bins=16))
+
+
+def test_load_untagged_legacy_checkpoint(reg_data, tmp_path):
+    """fit_resumable chunks (bare PartyTree snapshots, no meta) still load
+    as forests — the pre-tag format stays readable."""
+    from repro import ckpt
+    rxtr, rytr, rxte, _ = reg_data
+    fed = Federation(parties=2, n_bins=16)
+    fed.ingest(rxtr, rytr)
+    p = ForestParams(task="regression", n_estimators=2, max_depth=3,
+                     n_bins=16)
+    model = fed.fit(p)
+    ckpt.save_checkpoint(str(tmp_path), 2, model.trees_)   # no meta
+    restored = fed.load(str(tmp_path), p)
+    np.testing.assert_array_equal(restored.predict(rxte),
+                                  model.predict(rxte))
 
 
 # ------------------------------------------------------- sharded substrate

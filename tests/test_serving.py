@@ -242,3 +242,199 @@ def test_queue_zero_row_request_does_not_wedge(cls_forest):
     # drained queue serves follow-up traffic too
     r2 = queue.submit(xte[7:12])
     np.testing.assert_array_equal(queue.drain()[r2], ff.predict(xte[7:12]))
+
+
+def test_queue_cross_wave_request_spanning(cls_forest):
+    """One request split over >= 2 waves/buckets scatters back correctly,
+    also through the async pump (in-flight ring > 1)."""
+    ff, xte = cls_forest
+    want = ff.predict(xte)
+    for inflight in (1, 3):
+        server = ForestServer.from_forest(ff, buckets=(16, 64),
+                                          max_inflight=inflight)
+        queue = RequestQueue(server, max_wave_rows=64)
+        big = queue.submit(xte)                  # 200 rows -> >= 4 waves
+        small = queue.submit(xte[:5])
+        results = queue.drain()
+        np.testing.assert_array_equal(results[big], want)
+        np.testing.assert_array_equal(results[small], want[:5])
+        assert len(server.wave_stats) >= 4       # genuinely spanned waves
+
+
+@pytest.mark.parametrize("mask_regression", [False, True])
+def test_queue_zero_row_dtype_matches_decoded(mask_regression):
+    """Zero-row results come from the engine's decode path, so their dtype
+    matches non-empty decoded outputs — including the masked-regression
+    unmasker, whose output dtype differs from the raw program output."""
+    x, y = make_regression(400, 10, seed=4)
+    p = ForestParams(task="regression", n_estimators=2, max_depth=4,
+                     n_bins=16, seed=5)
+    ff = fit_federated_forest(x[:300], y[:300], 2, p,
+                              mask_regression=mask_regression)
+    server = ForestServer.from_forest(ff, buckets=(32,))
+    queue = RequestQueue(server)
+    rz, rn = queue.submit(x[:0]), queue.submit(x[300:340])
+    results = queue.drain()
+    assert results[rz].dtype == results[rn].dtype
+    assert results[rz].shape == (0,)
+    assert server.serve(x[:0]).dtype == results[rn].dtype
+    np.testing.assert_array_equal(results[rn], ff.predict(x[300:340]))
+
+
+@pytest.mark.parametrize("task", ["classification", "regression"])
+def test_queue_drain_parity_with_serve(cls_forest, reg_forest, task):
+    """Decode lives in exactly one layer (engine.collect): raw rows through
+    queue.submit+drain == server.serve, both tasks, values AND dtype."""
+    ff, xte = cls_forest if task == "classification" else reg_forest
+    server = ForestServer.from_forest(ff, buckets=(32, 64))
+    queue = RequestQueue(server)
+    rids = [queue.submit(xte[:50]), queue.submit(xte[50:83])]
+    results = queue.drain()
+    direct = server.serve(xte[:83])
+    got = np.concatenate([results[rids[0]], results[rids[1]]])
+    assert got.dtype == direct.dtype
+    np.testing.assert_array_equal(got, direct)
+    np.testing.assert_array_equal(direct, ff.predict(xte[:83]))
+
+
+# -------------------------------------------------------- async wave ring
+@pytest.mark.parametrize("fixture", ["cls", "reg"])
+def test_async_bit_identical_to_sync(cls_forest, reg_forest, fixture):
+    """The async pipeline (bounded in-flight ring) is bit-identical to the
+    sync path on mixed-size traffic — same executables, FIFO collection."""
+    ff, xte = cls_forest if fixture == "cls" else reg_forest
+    sync = ForestServer.from_forest(ff, buckets=(16, 64), max_inflight=1)
+    asyn = ForestServer.from_forest(ff, buckets=(16, 64), max_inflight=4)
+    got_s, got_a = sync.serve(xte), asyn.serve(xte)   # spans several waves
+    assert got_s.dtype == got_a.dtype
+    np.testing.assert_array_equal(got_s, got_a)
+    # the async ring actually ran deeper than one in-flight wave
+    assert max(w["inflight"] for w in asyn.wave_stats) > 1
+    assert max(w["inflight"] for w in sync.wave_stats) == 1
+    # queue traffic too: mixed request sizes through both pumps
+    want = ff.predict(xte)
+    for server in (sync, asyn):
+        q = RequestQueue(server, max_wave_rows=64)
+        rids = [q.submit(xte[lo:lo + s])
+                for lo, s in ((0, 5), (5, 90), (95, 33), (128, 1))]
+        res = q.drain()
+        for rid, (lo, s) in zip(rids, ((0, 5), (5, 90), (95, 33), (128, 1))):
+            np.testing.assert_array_equal(res[rid], want[lo:lo + s])
+
+
+def test_dispatch_wave_rejects_oversized_and_empty(cls_forest):
+    ff, xte = cls_forest
+    server = ForestServer.from_forest(ff, buckets=(16,))
+    xb = ff.partition_.bin_test(np.asarray(xte))
+    with pytest.raises(ValueError, match="wave of"):
+        server.dispatch_wave(xb[:, :17])
+    with pytest.raises(ValueError, match="wave of"):
+        server.dispatch_wave(xb[:, :0])
+
+
+def test_queue_drain_failure_leaves_rows_redispatchable(cls_forest):
+    """A dispatch failure mid-pump must not strand dispatched-but-unserved
+    rows: sent cursors roll back to done, so a retry serves everything."""
+    ff, xte = cls_forest
+    server = ForestServer.from_forest(ff, buckets=(16, 64), max_inflight=2)
+    queue = RequestQueue(server, max_wave_rows=64)
+    rids = [queue.submit(xte[:90]), queue.submit(xte[90:120])]
+    real_dispatch, boom = server.dispatch_wave, [True]
+
+    def failing(xb):
+        if boom[0]:
+            boom[0] = False
+            raise RuntimeError("transient dispatch failure")
+        return real_dispatch(xb)
+
+    server.dispatch_wave = failing
+    with pytest.raises(RuntimeError):
+        queue.drain()
+    assert server._n_inflight == 0               # discarded ring was drained
+    server.dispatch_wave = real_dispatch
+    results = queue.drain()                      # retry serves every row
+    want = ff.predict(xte[:120])
+    np.testing.assert_array_equal(results[rids[0]], want[:90])
+    np.testing.assert_array_equal(results[rids[1]], want[90:120])
+    # a bad binned request is rejected at submit, not mid-pump
+    with pytest.raises(ValueError, match="width"):
+        queue.submit(np.zeros((server.n_parties, 4, server._fp() + 1),
+                              np.uint8), binned=True)
+    with pytest.raises(ValueError, match="binned request"):
+        queue.submit(np.zeros((server.n_parties + 2, 4, server._fp()),
+                              np.uint8), binned=True)
+
+
+# ----------------------------------------------- serving-path guard rails
+def test_serve_binned_rejects_width_mismatch(cls_forest):
+    """A batch whose per-party width differs from the bound width must fail
+    loudly up front, not with an opaque XLA shape error mid-wave."""
+    ff, xte = cls_forest
+    server = ForestServer.from_forest(ff, buckets=(32,))
+    fp = server._fp()
+    bad = np.zeros((server.n_parties, 10, fp + 3), np.uint8)
+    with pytest.raises(ValueError, match=rf"width {fp + 3}.*width {fp}"):
+        server.serve_binned(bad)
+    # a width-free server binds the first width it sees, then holds it
+    free = ForestServer(ff.trees_, ff.params, buckets=(32,),
+                        n_features_per_party=fp)
+    with pytest.raises(ValueError, match="width"):
+        free.serve_binned(bad)
+
+
+def test_strip_raises_on_unexpected_rank(cls_forest):
+    """Per-tree / multi-output shapes must not be sliced silently (the old
+    code took out[0] of ANY multi-dim output)."""
+    ff, _ = cls_forest
+    server = ForestServer.from_forest(ff, buckets=(32,))
+    with pytest.raises(ValueError, match="unexpected shape"):
+        server._strip(np.zeros((4, 5, 6)), 5)
+    with pytest.raises(ValueError, match="unexpected shape"):
+        server._strip(np.zeros((server.n_parties + 1, 5)), 5)
+    # the two legitimate shapes pass
+    assert server._strip(np.arange(8), 5).shape == (5,)
+    assert server._strip(np.zeros((server.n_parties, 8)), 5).shape == (5,)
+
+
+# ------------------------------------------------------- bucket autotuning
+def test_autotune_buckets_from_traffic():
+    from repro.serving import autotune_buckets, observed_row_counts
+    rng = np.random.default_rng(0)
+    counts = rng.integers(1, 300, size=100)
+    buckets = autotune_buckets(counts, warm=(32, 256, 2048))
+    assert list(buckets) == sorted(set(buckets))          # ascending/unique
+    assert len(buckets) <= 4
+    assert buckets[-1] >= counts.max()                    # covers the max
+    # too little traffic -> warm start unchanged
+    assert autotune_buckets([5, 7], warm=(32, 256)) == (32, 256)
+    # stats-record extraction: wave_stats and request_stats shapes
+    rows = observed_row_counts([{"n_rows": 3}, {"rows": 9}, {"n_rows": 0}],
+                               [4, 0])
+    assert rows.tolist() == [3, 9, 4]
+
+
+def test_autotuned_buckets_compile_once(cls_forest):
+    """A server retuned from observed traffic compiles each bucket exactly
+    once per autotune epoch: warmup compiles len(buckets), traffic that
+    fits recompiles nothing, surviving buckets keep their executables."""
+    from repro.serving import autotune_buckets
+    ff, xte = cls_forest
+    server = ForestServer.from_forest(ff, buckets=(32, 128))
+    server.warmup()
+    assert server.compile_count == 2
+    for n in (3, 30, 100, 128):                  # observe traffic
+        server.serve(xte[:n])
+    assert server.compile_count == 2
+    tuned = autotune_buckets(server.wave_stats, warm=server.buckets,
+                             min_observations=4)
+    server.set_buckets(tuned)
+    server.warmup()
+    epoch_compiles = server.compile_count
+    assert epoch_compiles <= 2 + len(tuned)      # survivors kept their exec
+    for n in (3, 30, 100, int(tuned[-1])):       # epoch traffic
+        got = server.serve(xte[:n])
+        np.testing.assert_array_equal(got, ff.predict(xte[:n]))
+    assert server.compile_count == epoch_compiles  # compile-once per epoch
+    # 128 survived the retune (traffic hit it), so its executable was kept
+    if 128 in tuned:
+        assert epoch_compiles < 2 + len(tuned)
