@@ -1,0 +1,90 @@
+"""Cross-silo, party-first ingestion: misaligned regional extracts -> align
+-> fit -> serve, with the paper's losslessness guarantee intact end to end.
+
+Three regional silos — a bank, an e-commerce company, and a telco — each
+hold their own feature columns for their own customer base.  The customer
+sets overlap but don't coincide, every extract is shuffled, and only the
+bank holds labels.  Nothing here starts from a centrally pre-aligned
+matrix: each silo ships a ``PartyBlock`` (here round-tripped through
+per-party CSV files via ``CSVSource``, the DataSource hook), the Federation
+session aligns them on hashed IDs (paper §4.3), bins each block
+party-locally, trains, and then serves per-party *request* blocks whose
+rows arrive out of order and superset — re-aligned before dispatch.
+
+Run:  PYTHONPATH=src python examples/cross_silo_ingest.py
+"""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import ForestParams, PartyBlock, crypto
+from repro.core.partyblock import CSVSource
+from repro.data import make_classification, make_party_views
+from repro.data.metrics import accuracy
+from repro.federation import Federation
+
+
+def main() -> None:
+    # --- three silos with partially-overlapping customers -----------------
+    x, y = make_classification(3000, 30, 2, n_informative=10, seed=0)
+    blocks, x_aligned, y_aligned = make_party_views(
+        x, y, n_parties=3, overlap=0.8, seed=0)
+    silos = ("bank", "ecom", "telco")
+    blocks = [PartyBlock(name=s, x=b.x, ids=b.ids, y=b.y,
+                         feature_ids=b.feature_ids)
+              for s, b in zip(silos, blocks)]
+    for b in blocks:
+        print(f"{b.name:6s}: {b.n_samples} customers x {b.n_features} "
+              f"features" + ("  [labels]" if b.y is not None else ""))
+
+    # --- each silo dumps a CSV; ingestion loads through the DataSource ----
+    with tempfile.TemporaryDirectory() as d:
+        sources = [CSVSource(b.to_csv(os.path.join(d, f"{b.name}.csv")),
+                             name=b.name) for b in blocks]
+        fed = Federation(parties=3, n_bins=32)
+        part = fed.ingest(sources, validate=True)   # align + party-local bin
+    print(f"aligned {part.n_samples} common customers across "
+          f"{part.n_parties} silos (hashed-ID intersection)")
+
+    model = fed.fit(ForestParams(n_estimators=12, max_depth=6, n_bins=32,
+                                 seed=42))
+    acc = accuracy(fed.labels_, fed.predict(model, part.dense_raw()))
+    print(f"federated forest: train acc={acc:.3f}")
+
+    # --- losslessness: the centrally pre-aligned build is bit-identical ---
+    fed_c = Federation(parties=3, n_bins=32)
+    fed_c.ingest(x_aligned, y_aligned)
+    central = fed_c.fit(ForestParams(n_estimators=12, max_depth=6, n_bins=32,
+                                     seed=42))
+    same = np.array_equal(fed.predict(model, x_aligned),
+                          fed_c.predict(central, x_aligned))
+    print(f"party-first ingest == centrally pre-aligned: {same}")
+    assert same, "losslessness violated"
+
+    # --- serving: per-party request blocks, out-of-order + superset -------
+    server = fed.serve(model, buckets=(256,))
+    xt, _ = make_classification(200, 30, 2, seed=7)
+    qids = np.array([f"q{i:04d}" for i in range(len(xt))])
+    rng = np.random.default_rng(1)
+    req = []
+    for i, name in enumerate(part.party_names):
+        gid = part.feat_gid[i][part.feat_gid[i] >= 0]
+        rows = rng.permutation(len(xt))             # silo-local row order
+        extra = rng.normal(size=(17, len(gid)))     # rows only it holds
+        req.append(PartyBlock(
+            name=name,
+            x=np.concatenate([xt[rows][:, gid], extra]),
+            ids=np.concatenate([qids[rows],
+                                [f"{name}-only-{j}" for j in range(17)]])))
+    ids, preds = server.serve_parties(req)
+    order = np.argsort(crypto.hash_ids(qids))
+    assert np.array_equal(ids, qids[order])
+    assert np.array_equal(preds, model.predict(xt[order])), \
+        "served outputs diverge from the fitted model"
+    print(f"served {len(preds)} rows from misaligned request blocks "
+          f"(dropped {len(req[0].ids) - len(preds)} non-common rows/party)")
+
+
+if __name__ == "__main__":
+    main()

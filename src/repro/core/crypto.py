@@ -24,20 +24,55 @@ import hashlib
 
 import numpy as np
 
+DEFAULT_SALT = "repro-ff"
 
-def hash_ids(ids, salt: str = "repro-ff") -> np.ndarray:
+
+def hash_ids(ids, salt: str = DEFAULT_SALT) -> np.ndarray:
     """Irreversible sample-ID encryption for alignment (paper: MD5)."""
     out = [hashlib.sha256(f"{salt}:{i}".encode()).hexdigest() for i in ids]
     return np.asarray(out)
 
 
-def align_ids(hashed_a: np.ndarray, hashed_b: np.ndarray):
-    """Private-set-intersection stand-in: positions of the common hashed IDs."""
-    common = np.intersect1d(hashed_a, hashed_b)
-    ia = {h: i for i, h in enumerate(hashed_a)}
-    ib = {h: i for i, h in enumerate(hashed_b)}
-    return (np.array([ia[h] for h in common], dtype=np.int64),
-            np.array([ib[h] for h in common], dtype=np.int64))
+def align_ids(*hashed_parties: np.ndarray,
+              check_unique: bool = True) -> tuple[np.ndarray, ...]:
+    """Private-set-intersection stand-in, generalized to M parties.
+
+    Iterated hashed-ID intersection (paper §4.3: alignment sees hashed IDs
+    only).  Returns one int64 position array per party; gathering party i's
+    rows at ``positions[i]`` puts every party on the same **canonical common
+    ordering** — the lexicographic sort of the common hashed IDs — which is
+    invariant to each party's row order and to the order the parties are
+    listed in.
+
+    Raises ValueError on duplicate hashed IDs within a party (alignment
+    would be ambiguous) and on an empty intersection (no shared samples).
+    Callers that already validated per-party uniqueness upstream (with
+    better error context, e.g. partyblock.align_party_blocks naming the
+    party) pass ``check_unique=False`` to skip the second O(n log n) sort —
+    the serving request path hits this per request.
+    """
+    if not hashed_parties:
+        raise ValueError("align_ids needs at least one party's hashed IDs")
+    hs = [np.asarray(h).reshape(-1) for h in hashed_parties]
+    if check_unique:
+        for i, h in enumerate(hs):
+            if np.unique(h).size != h.size:
+                raise ValueError(
+                    f"party {i} has duplicate sample IDs: alignment on "
+                    f"hashed IDs is ambiguous — deduplicate before ingest")
+    common = np.sort(hs[0])
+    for h in hs[1:]:
+        common = np.intersect1d(common, h, assume_unique=True)
+    if common.size == 0:
+        raise ValueError(
+            f"empty hashed-ID intersection across {len(hs)} parties: the "
+            f"parties share no samples (same salt on every party?)")
+    out = []
+    for h in hs:
+        order = np.argsort(h)
+        out.append(order[np.searchsorted(h, common, sorter=order)]
+                   .astype(np.int64))
+    return tuple(out)
 
 
 def encode_labels(y: np.ndarray, n_classes: int, seed: int = 0):

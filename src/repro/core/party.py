@@ -5,6 +5,16 @@ space; disjoint feature sets per party.  To run the protocol as SPMD code we
 store the partition as *stacked, padded* arrays with a leading party axis —
 the same representation feeds vmap (single-host simulation) and shard_map
 (production mesh) unchanged.
+
+Two roads lead here:
+  * ``partition_from_blocks`` — the canonical party-first path: per-party
+    PartyBlocks (core/partyblock.py) are aligned on hashed sample IDs and
+    binned *party-locally*; quantile binning is a per-feature transform, so
+    the result is bit-identical to binning the assembled central matrix
+    (``validate=True`` asserts it).
+  * ``make_vertical_partition`` — the raw-matrix compat adapter: a central
+    (N, F) matrix is split into pre-aligned PartyBlocks and fed through the
+    exact same assembly.
 """
 from __future__ import annotations
 
@@ -12,7 +22,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import binning
+from repro.core import binning, crypto
+from repro.core.partyblock import PartyBlock, align_party_blocks, resolve_blocks
 
 
 @dataclasses.dataclass
@@ -30,6 +41,9 @@ class VerticalPartition:
       raw_parts:  optional per-party raw (unbinned) feature blocks — what a
                   party actually holds locally.  Linear models (fedlinear.py)
                   train on these; tree models only ever see ``xb``.
+      party_names: per-party identifiers in party-axis order (canonical:
+                  sorted).  Serving matches per-party request blocks to
+                  fit-time parties by name (``bin_party_blocks``).
     """
 
     xb: np.ndarray
@@ -37,6 +51,7 @@ class VerticalPartition:
     n_features: int
     boundaries: np.ndarray
     raw_parts: list[np.ndarray] | None = None
+    party_names: tuple[str, ...] | None = None
 
     @property
     def n_parties(self) -> int:
@@ -64,6 +79,72 @@ class VerticalPartition:
         return [x[:, self.feat_gid[i][self.feat_gid[i] >= 0]]
                 for i in range(self.n_parties)]
 
+    def dense_raw(self) -> np.ndarray:
+        """The equivalent centrally pre-aligned raw (N, F) matrix — the
+        parties' aligned blocks scattered back to global column positions
+        (the inverse of split_raw; needs ``raw_parts``)."""
+        if self.raw_parts is None:
+            raise ValueError("this partition was built without raw_parts")
+        out = np.empty((self.n_samples, self.n_features), dtype=np.float64)
+        for i, rp in enumerate(self.raw_parts):
+            out[:, self.feat_gid[i][self.feat_gid[i] >= 0]] = rp
+        return out
+
+    def party_index(self, name: str) -> int:
+        if self.party_names is None:
+            raise ValueError("partition carries no party names")
+        if name not in self.party_names:
+            raise ValueError(f"unknown party {name!r} (partition has "
+                             f"{list(self.party_names)})")
+        return self.party_names.index(name)
+
+    def bin_party_blocks(self, blocks, *, salt: str = crypto.DEFAULT_SALT):
+        """Align + bin per-party *request* blocks against this fit-time
+        partition: out-of-order and superset rows are re-aligned on hashed
+        IDs (non-common rows dropped), each block is binned party-locally
+        with its own fit-time boundaries, and the result is the stacked
+        (M, n, Fp) request tensor the serving programs consume.
+
+        Blocks are matched to parties by name when the partition carries
+        ``party_names`` (any input order); otherwise they must arrive in
+        party-axis order.  Returns ``(common_ids, xb_parts)``.
+        """
+        blocks = resolve_blocks(blocks)
+        if self.party_names is not None:
+            by_name = {b.name: b for b in blocks}
+            missing = [n for n in self.party_names if n not in by_name]
+            extra = [n for n in by_name if n not in self.party_names]
+            if missing or extra:
+                raise ValueError(
+                    f"request blocks must cover exactly the fit-time "
+                    f"parties {list(self.party_names)}; missing {missing}, "
+                    f"unknown {extra}")
+            blocks = [by_name[n] for n in self.party_names]
+        elif len(blocks) != self.n_parties:
+            raise ValueError(f"expected {self.n_parties} request blocks, "
+                             f"got {len(blocks)}")
+        common, positions = align_party_blocks(blocks, salt=salt)
+        m, fp = self.feat_gid.shape
+        out = np.zeros((m, len(common), fp), dtype=np.uint8)
+        for i, (b, pos) in enumerate(zip(blocks, positions)):
+            gid = self.feat_gid[i][self.feat_gid[i] >= 0]
+            x_i = b.x[pos]
+            if b.feature_ids is not None:       # request columns may arrive
+                order = np.argsort(b.feature_ids)  # in any global-id order
+                if not np.array_equal(b.feature_ids[order], gid):
+                    raise ValueError(
+                        f"party {b.name!r}: request feature_ids "
+                        f"{sorted(b.feature_ids)} != fit-time features "
+                        f"{list(gid)}")
+                x_i = x_i[:, order]
+            elif b.n_features != len(gid):
+                raise ValueError(
+                    f"party {b.name!r}: request block has {b.n_features} "
+                    f"features but the fit-time partition holds {len(gid)}")
+            out[i, :, : len(gid)] = binning.apply_bins(
+                x_i, self.boundaries[gid])
+        return common, out
+
 
 def assign_features(n_features: int, n_parties: int, *, contiguous: bool = True,
                     rng: np.random.Generator | None = None) -> list[np.ndarray]:
@@ -81,17 +162,118 @@ def assign_features(n_features: int, n_parties: int, *, contiguous: bool = True,
     return [np.sort(a) for a in np.array_split(ids, n_parties)]
 
 
+def partition_from_blocks(blocks, n_bins: int, *,
+                          salt: str = crypto.DEFAULT_SALT,
+                          validate: bool = False):
+    """Assemble per-party PartyBlocks into the stacked VerticalPartition.
+
+    The canonical party-first ingest path:
+      1. order parties canonically (sorted by name — permuting the input
+         list cannot change the result);
+      2. align on hashed sample IDs (crypto.align_ids): common rows in
+         canonical sorted-hash order, superset rows dropped;
+      3. bin each block **party-locally** over its aligned rows.  Quantile
+         binning is per-feature, so this is lossless by construction —
+         bit-identical to binning the assembled central matrix
+         (``validate=True`` re-derives the central binning and asserts it);
+      4. stack into the (M, N, Fp) padded partition every downstream
+         consumer (fit / predict / serve, both substrates) already speaks.
+
+    Global feature ids are assigned contiguously in canonical party order,
+    unless every block carries ``feature_ids`` (they must then partition
+    0..F-1 — the raw-matrix compat adapter preserves the original column
+    encoding this way).
+
+    Returns ``(partition, y, common_ids)``; ``y`` is the label-holding
+    party's labels gathered onto the aligned ordering (None if no party
+    holds labels — at most one may).
+    """
+    blocks = sorted(resolve_blocks(blocks), key=lambda b: b.name)
+    common, positions = align_party_blocks(blocks, salt=salt)
+
+    with_ids = [b for b in blocks if b.feature_ids is not None]
+    if with_ids and len(with_ids) != len(blocks):
+        raise ValueError("feature_ids must be set on every party or none")
+    if with_ids:
+        groups = [np.sort(b.feature_ids) for b in blocks]
+        all_ids = np.concatenate(groups) if groups else np.empty(0, np.int64)
+        n_features = int(all_ids.size)
+        if not np.array_equal(np.sort(all_ids), np.arange(n_features)):
+            raise ValueError(
+                f"feature_ids across parties must partition 0..F-1, got "
+                f"{sorted(all_ids.tolist())}")
+    else:
+        offsets = np.cumsum([0] + [b.n_features for b in blocks])
+        groups = [np.arange(offsets[i], offsets[i + 1])
+                  for i in range(len(blocks))]
+        n_features = int(offsets[-1])
+
+    feat_gid = _pad_groups(groups)
+    m, fp = feat_gid.shape
+    xb = np.zeros((m, len(common), fp), dtype=np.uint8)
+    boundaries = np.zeros((n_features, max(n_bins - 1, 0)), dtype=np.float64)
+    raw_parts = []
+    for i, (b, pos, g) in enumerate(zip(blocks, positions, groups)):
+        x_i = b.x[pos]
+        if b.feature_ids is not None:           # party-local column order ->
+            x_i = x_i[:, np.argsort(b.feature_ids)]  # ascending global id
+        xb_i, b_i = binning.bin_dataset(x_i, n_bins)
+        xb[i, :, : x_i.shape[1]] = xb_i
+        boundaries[g] = b_i
+        raw_parts.append(x_i)
+
+    part = VerticalPartition(xb=xb, feat_gid=feat_gid,
+                             n_features=n_features, boundaries=boundaries,
+                             raw_parts=raw_parts,
+                             party_names=tuple(b.name for b in blocks))
+    if validate:
+        _assert_party_local_binning_lossless(part, n_bins)
+
+    y, holder = None, None
+    for b, pos in zip(blocks, positions):
+        if b.y is None:
+            continue
+        if holder is not None:
+            raise ValueError(f"labels held by more than one party "
+                             f"({holder!r} and {b.name!r}); exactly one "
+                             f"party owns the labels")
+        holder, y = b.name, b.y[pos]
+    return part, y, common
+
+
+def _assert_party_local_binning_lossless(part: VerticalPartition,
+                                         n_bins: int) -> None:
+    """Binning is per-feature, so party-local binning of aligned blocks must
+    equal central binning of the assembled matrix — assert it (guarded
+    behind ``validate=True``: it re-bins the whole dataset).  Raises, not
+    ``assert``: the check must survive ``python -O``."""
+    xb_central, b_central = binning.bin_dataset(part.dense_raw(), n_bins)
+    if not np.array_equal(part.boundaries, b_central):
+        raise AssertionError(
+            "party-local boundaries diverge from central binning")
+    if not np.array_equal(part.xb, _partition_binned(xb_central,
+                                                     part.feat_gid)):
+        raise AssertionError(
+            "party-local binned values diverge from central binning")
+
+
 def make_vertical_partition(x: np.ndarray, n_parties: int, n_bins: int, *,
-                            contiguous: bool = True, seed: int = 0) -> VerticalPartition:
-    """Bin a raw (N, F) matrix and split its columns across ``n_parties``."""
-    xb, boundaries = binning.bin_dataset(x, n_bins)
+                            contiguous: bool = True, seed: int = 0,
+                            validate: bool = False) -> VerticalPartition:
+    """Split a centrally held, pre-aligned raw (N, F) matrix across
+    ``n_parties`` — the thin compat adapter over the party-first path:
+    per-party PartyBlocks with identical implicit row IDs take the
+    pre-aligned fast path (row order preserved) through
+    :func:`partition_from_blocks`."""
+    x = np.asarray(x)
     groups = assign_features(x.shape[1], n_parties, contiguous=contiguous,
                              rng=np.random.default_rng(seed))
-    feat_gid = _pad_groups(groups)
-    return VerticalPartition(xb=_partition_binned(xb, feat_gid),
-                             feat_gid=feat_gid, n_features=x.shape[1],
-                             boundaries=boundaries,
-                             raw_parts=[np.asarray(x[:, g]) for g in groups])
+    ids = np.arange(x.shape[0])
+    blocks = [PartyBlock(name=f"party{i:03d}", x=x[:, g], ids=ids,
+                         feature_ids=g)
+              for i, g in enumerate(groups)]
+    part, _, _ = partition_from_blocks(blocks, n_bins, validate=validate)
+    return part
 
 
 def _pad_groups(groups: list[np.ndarray]) -> np.ndarray:

@@ -1,1 +1,3 @@
-from repro.data.tabular import DATASETS, make_classification, make_regression, load_dataset  # noqa: F401
+from repro.data.tabular import (DATASETS, make_classification,  # noqa: F401
+                                make_party_views, make_regression,
+                                load_dataset)

@@ -70,6 +70,59 @@ DATASETS: dict[str, DatasetSpec] = {
 }
 
 
+def make_party_views(x, y=None, n_parties: int = 3, *, overlap: float = 0.75,
+                     contiguous: bool = True, shuffle: bool = True,
+                     label_party: int = 0, seed: int = 0,
+                     salt: str | None = None):
+    """Fabricate realistic per-party views of a dense dataset: shuffled,
+    partially-overlapping regional extracts for party-first ingestion tests
+    and benchmarks.
+
+    Every party receives its own feature columns for (a) a common core of
+    ``overlap * n`` samples shared by all parties and (b) a disjoint slice
+    of the remaining samples only it holds — so the M-party ID intersection
+    is exactly the core.  Each party's rows are independently shuffled and
+    keyed by string sample IDs; ``label_party`` carries the labels.
+
+    Returns ``(blocks, x_aligned, y_aligned)`` where the aligned pair is
+    the **equivalent centrally pre-aligned dataset**: the core rows in
+    canonical order (sorted by hashed ID — exactly the ordering
+    party-block ingestion aligns to).  Fitting from ``blocks`` is
+    bit-identical to fitting from ``Federation(seed=seed).ingest(x_aligned,
+    y_aligned, contiguous=contiguous)`` (tests/test_partyblock.py asserts
+    it): blocks carry ``feature_ids`` from the same ``assign_features``
+    draw the raw-matrix adapter makes with this ``seed``.
+    """
+    from repro.core import crypto
+    from repro.core.party import assign_features
+    from repro.core.partyblock import PartyBlock
+    x = np.asarray(x)
+    n, f = x.shape
+    if not 0.0 < overlap <= 1.0:
+        raise ValueError(f"overlap must be in (0, 1], got {overlap}")
+    groups = assign_features(f, n_parties, contiguous=contiguous,
+                             rng=np.random.default_rng(seed))
+    rng = np.random.default_rng([seed, 104729])  # own stream: never collides
+    perm = rng.permutation(n)                    # with the features draw
+    core = perm[: max(1, int(round(overlap * n)))]
+    extras = np.array_split(perm[len(core):], n_parties)
+    ids = np.array([f"u{i:07d}" for i in range(n)])
+    blocks = []
+    for i, g in enumerate(groups):
+        rows = np.concatenate([core, extras[i]])
+        if shuffle:
+            rows = rows[np.random.default_rng([seed, i, 7])
+                        .permutation(len(rows))]
+        blocks.append(PartyBlock(
+            name=f"party{i:03d}", x=x[rows][:, g], ids=ids[rows],
+            y=None if y is None or i != label_party else np.asarray(y)[rows],
+            feature_ids=g))
+    salt = crypto.DEFAULT_SALT if salt is None else salt
+    aligned = core[np.argsort(crypto.hash_ids(ids[core], salt=salt))]
+    return blocks, x[aligned], (None if y is None
+                                else np.asarray(y)[aligned])
+
+
 def load_dataset(name: str, seed: int = 0):
     spec = DATASETS[name]
     if spec.task == "classification":

@@ -3,7 +3,8 @@ whole federated lifecycle (fit / predict / serve / checkpoint).
 
     from repro.federation import Federation
     fed = Federation(parties=4)
-    fed.ingest(x_train, y_train)
+    fed.ingest(party_blocks)      # PartyBlocks: hashed-ID align + local bin
+    fed.ingest(x_train, y_train)  # or the pre-aligned raw-matrix adapter
     model = fed.fit(ForestParams(n_estimators=20, max_depth=8))
     preds = fed.predict(model, x_test)
     server = fed.serve(model)

@@ -8,7 +8,8 @@ instead of each entrypoint re-wiring vmap/shard_map/mesh/hist-backend by
 hand::
 
     fed = Federation(parties=4)                 # or substrate="sharded", mesh=...
-    part = fed.ingest(x_train, y_train)         # VerticalPartition
+    part = fed.ingest(party_blocks)             # party-first: align + bin
+    part = fed.ingest(x_train, y_train)         # or the raw-matrix adapter
     model = fed.fit(ForestParams(...))          # FittedModel (Estimator)
     preds = fed.predict(model, x_test)          # one-round, leaf-compacted
     server = fed.serve(model, buckets=(32, 256))  # ForestServer on the session mesh
@@ -28,7 +29,10 @@ from typing import Any, Callable
 
 import numpy as np
 
-from repro.core.party import VerticalPartition, make_vertical_partition
+from repro.core import crypto
+from repro.core.party import (VerticalPartition, make_vertical_partition,
+                              partition_from_blocks)
+from repro.core.partyblock import DataSource, PartyBlock, is_block_sequence
 from repro.core.types import ForestParams
 from repro.federation import programs
 from repro.federation.estimator import Estimator
@@ -72,6 +76,10 @@ class Federation:
                                            parties=self.parties)
         self._partition: VerticalPartition | None = None
         self._y: np.ndarray | None = None
+        # sample IDs of the ingested training set in aligned (row) order —
+        # the canonical common ordering for party-block ingest, arange for
+        # the pre-aligned raw-matrix path
+        self.aligned_ids_: np.ndarray | None = None
         # id(model) -> (model, trees_ ref, LeafTable): the plan is valid
         # exactly while the model still holds that PartyTree stack.  The
         # strong model ref keeps the id stable (no reuse after gc); sessions
@@ -84,18 +92,67 @@ class Federation:
         self._servers: dict[tuple, tuple[Any, Any, tuple]] = {}
 
     # ------------------------------------------------------------------ data
-    def ingest(self, x: np.ndarray, y: np.ndarray | None = None, *,
+    def ingest(self, data, y: np.ndarray | None = None, *,
                n_bins: int | None = None, contiguous: bool = True,
-               seed: int | None = None) -> VerticalPartition:
-        """Vertically partition + bin a raw (N, F) matrix across the
-        session's M parties; remembers (partition, y) as the session's
-        training set so ``fit(spec)`` needs no further arguments."""
+               seed: int | None = None, salt: str = crypto.DEFAULT_SALT,
+               validate: bool = False) -> VerticalPartition:
+        """Ingest the session's training set; remembers (partition, y) so
+        ``fit(spec)`` needs no further arguments.
+
+        The canonical, party-first shape (paper §3.1/§4.3): ``data`` is a
+        sequence of per-party :class:`PartyBlock`s (or DataSources loading
+        them — e.g. ``CSVSource`` per regional file), each holding raw
+        features keyed by that party's own sample IDs, with exactly one
+        party holding the labels.  The session aligns the blocks on hashed
+        IDs (iterated M-party intersection; superset/out-of-order rows
+        collapse onto the canonical common ordering), bins each block
+        party-locally (per-feature, hence lossless — ``validate=True``
+        asserts bit-equality with central binning), and assembles the
+        stacked VerticalPartition everything downstream consumes unchanged.
+        The aligned sample IDs land on ``self.aligned_ids_``.
+
+        Raises ValueError on an empty ID intersection, on duplicate IDs
+        within a party, and on labels held by more than one party.
+
+        Compat shape: a centrally held, pre-aligned raw (N, F) matrix plus
+        ``y`` — adapted into implicit pre-aligned PartyBlocks split across
+        the session's M parties (``contiguous``/``seed`` steer the feature
+        assignment exactly as before).
+        """
+        if is_block_sequence(data):
+            if y is not None:
+                raise ValueError(
+                    "party-first ingest: labels ride on their owning "
+                    "PartyBlock (y=...), not as a separate argument")
+            if not contiguous or seed is not None:
+                raise ValueError(
+                    "contiguous/seed steer the raw-matrix adapter's feature "
+                    "assignment; party blocks own theirs (feature_ids, or "
+                    "contiguous ids in canonical name order)")
+            if len(data) != self.parties:
+                raise ValueError(f"got {len(data)} party blocks but the "
+                                 f"session declares {self.parties} parties")
+            part, y_aligned, ids = partition_from_blocks(
+                data, n_bins or self.n_bins, salt=salt, validate=validate)
+            self._partition, self._y = part, y_aligned
+            self.aligned_ids_ = ids
+            return part
+        if isinstance(data, (PartyBlock, DataSource)):
+            raise TypeError("pass PartyBlocks as a sequence: "
+                            "ingest([block_a, block_b, ...])")
         part = make_vertical_partition(
-            np.asarray(x), self.parties, n_bins or self.n_bins,
-            contiguous=contiguous, seed=self.seed if seed is None else seed)
+            np.asarray(data), self.parties, n_bins or self.n_bins,
+            contiguous=contiguous, seed=self.seed if seed is None else seed,
+            validate=validate)
         self._partition = part
         self._y = None if y is None else np.asarray(y)
+        self.aligned_ids_ = np.arange(part.n_samples)
         return part
+
+    @property
+    def labels_(self) -> np.ndarray | None:
+        """The ingested labels, gathered onto the aligned row ordering."""
+        return self._y
 
     # ------------------------------------------------------------------- fit
     def fit(self, spec, partition: VerticalPartition | None = None,

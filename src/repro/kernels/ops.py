@@ -13,7 +13,7 @@
                             to ``scatter`` on every host;
   * ``ref``               — the einsum oracle.
   * ``auto``              — resolves per host: compiled Pallas on TPU,
-                            scatter everywhere else.
+                            segment_sum on GPU, scatter on CPU.
 All agree to float32 tolerance (tests/test_kernels.py sweeps them).  New
 backends register with :func:`register_backend` and become selectable through
 ``ForestParams.hist_impl`` without touching the builder.
@@ -51,14 +51,29 @@ def register_backend(name: str) -> Callable[[HistogramFn], HistogramFn]:
     return deco
 
 
+def detected_platform() -> str:
+    """The accelerator platform ``auto`` resolves against — a seam so tests
+    can cover cpu/gpu/tpu resolution without the hardware (monkeypatch this,
+    not jax.default_backend)."""
+    return jax.default_backend()
+
+
 def resolve_backend(impl: str) -> str:
-    """Map ``"auto"`` onto a concrete registry key for this host."""
+    """Map ``"auto"`` onto a concrete registry key for this host: compiled
+    Pallas on TPU, ``segment_sum`` on GPU (XLA's tuned unsorted-segment
+    reduction beats the generic scatter-add lowering there), ``scatter``
+    on CPU."""
     if impl != "auto":
         if impl not in BACKENDS:
             raise ValueError(
                 f"unknown impl {impl!r} (have {sorted(BACKENDS)})")
         return impl
-    return "pallas" if jax.default_backend() == "tpu" else "scatter"
+    platform = detected_platform()
+    if platform == "tpu":
+        return "pallas"
+    if platform in ("gpu", "cuda", "rocm"):
+        return "segment_sum"
+    return "scatter"
 
 
 def available_backends() -> tuple[str, ...]:

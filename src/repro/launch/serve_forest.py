@@ -8,6 +8,12 @@ Reports per-wave latency, aggregate rows/s, psum payload bytes, and the
 compile count (which must stop growing after warmup: the
 bucket/pad/compile-once contract).
 
+Training data arrives either as a synthetic pre-aligned matrix (default) or
+party-first: per-party CSV extracts (``--party-csv name=path``, repeated)
+aligned on hashed IDs at ingest.  On the party-first path, traffic is also
+party-first: each request round submits per-party blocks with shuffled rows
+and party-local superset rows, re-aligned by the queue before dispatch.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve_forest --parties 4 --depth 8
   PYTHONPATH=src python -m repro.launch.serve_forest --dense   # no LeafTable
@@ -15,6 +21,8 @@ Examples:
       --autotune   # async wave ring + traffic-autotuned buckets
   PYTHONPATH=src python -m repro.launch.serve_forest --ckpt-dir /tmp/ff \
       --save-ckpt   # round-trip through fed.save / fed.load first
+  PYTHONPATH=src python -m repro.launch.serve_forest \
+      --party-csv bank=/data/bank.csv --party-csv ecom=/data/ecom.csv
 """
 from __future__ import annotations
 
@@ -23,10 +31,27 @@ import time
 
 import numpy as np
 
-from repro.core import ForestParams
+from repro.core import ForestParams, PartyBlock
 from repro.data import make_classification
 from repro.federation import Federation
 from repro.serving import RequestQueue
+
+
+def party_request(part, x_rows: np.ndarray, ids: np.ndarray,
+                  rng: np.random.Generator) -> list[PartyBlock]:
+    """Shape dense rows into per-party request blocks the way real traffic
+    arrives: each party's rows independently shuffled, plus a few rows only
+    that party holds (dropped at alignment)."""
+    blocks = []
+    for i, name in enumerate(part.party_names):
+        gid = part.feat_gid[i][part.feat_gid[i] >= 0]
+        order = rng.permutation(len(ids))
+        extra = rng.normal(size=(int(rng.integers(1, 4)), len(gid)))
+        blocks.append(PartyBlock(
+            name=name, x=np.concatenate([x_rows[order][:, gid], extra]),
+            ids=np.concatenate([ids[order],
+                                [f"{name}-x{j}" for j in range(len(extra))]])))
+    return blocks
 
 
 def main() -> None:
@@ -54,19 +79,35 @@ def main() -> None:
                          "directory instead of using the in-memory fit")
     ap.add_argument("--save-ckpt", action="store_true",
                     help="save the fitted forest to --ckpt-dir first")
+    ap.add_argument("--party-csv", action="append", default=None,
+                    metavar="NAME=PATH",
+                    help="per-party CSV extract (repeat once per party): "
+                         "party-first ingest + party-block request traffic")
+    ap.add_argument("--id-column", default="id")
+    ap.add_argument("--label-column", default="label")
     args = ap.parse_args()
     buckets = tuple(int(b) for b in args.buckets.split(","))
 
     p = ForestParams(n_estimators=args.trees, max_depth=args.depth,
                      n_bins=16, seed=0)
-    x, y = make_classification(args.train_rows, args.features, 2, seed=0)
-
-    fed = Federation(parties=args.parties, n_bins=p.n_bins)
-    fed.ingest(x, y)
+    fed: Federation
+    if args.party_csv:
+        from repro.launch.train import parse_party_csvs
+        sources = parse_party_csvs(args.party_csv, args.id_column,
+                                   args.label_column)
+        fed = Federation(parties=len(sources), n_bins=p.n_bins)
+        part = fed.ingest(sources)
+        x = part.dense_raw()
+        print(f"aligned {part.n_samples} common samples across "
+              f"{part.n_parties} parties {list(part.party_names)}")
+    else:
+        x, y = make_classification(args.train_rows, args.features, 2, seed=0)
+        fed = Federation(parties=args.parties, n_bins=p.n_bins)
+        part = fed.ingest(x, y)
     t0 = time.time()
     model = fed.fit(p)
     print(f"fit: {args.trees} trees x depth {args.depth} over "
-          f"{args.parties} parties in {time.time() - t0:.1f}s")
+          f"{part.n_parties} parties in {time.time() - t0:.1f}s")
 
     if args.ckpt_dir and args.save_ckpt:
         fed.save(model, args.ckpt_dir, step=args.trees)
@@ -91,8 +132,14 @@ def main() -> None:
     queue = RequestQueue(server)
     for rnd in range(args.rounds):
         sizes = rng.integers(1, buckets[-1] // 2, size=args.requests)
-        for s in sizes:
-            queue.submit(x[rng.integers(0, len(x), size=s)])
+        for k, s in enumerate(sizes):
+            rows = x[rng.integers(0, len(x), size=s)]
+            if args.party_csv:      # party-first traffic: per-party blocks,
+                queue.submit_parties(party_request(   # re-aligned in-queue
+                    part, rows, np.array([f"r{rnd}-{k}-{j}"
+                                          for j in range(s)]), rng))
+            else:
+                queue.submit(rows)
         t0 = time.time()
         results = queue.drain()
         dt = time.time() - t0

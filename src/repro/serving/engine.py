@@ -345,6 +345,24 @@ class ModelServer:
         partition/bin/standardize step; decode is applied per wave."""
         return self.serve_binned(self._prep(np.asarray(x_test)))
 
+    def serve_parties(self, blocks, *, salt=None):
+        """Serve per-party request blocks keyed by (hashed) sample IDs.
+
+        ``blocks`` are PartyBlocks/DataSources — one per fit-time party,
+        matched by name, rows in any order and possibly superset (each
+        region ships whatever extract it has).  The engine re-aligns them on
+        hashed IDs, drops non-common rows, bins party-locally with the
+        fit-time boundaries and dispatches as usual.  Returns
+        ``(ids, predictions)`` in the canonical aligned order.
+        """
+        from repro.core import crypto
+        if self.partition is None:
+            raise ValueError("party-block serving needs the fit-time "
+                             "VerticalPartition bound to the server")
+        ids, xb = self.partition.bin_party_blocks(
+            blocks, salt=salt if salt is not None else crypto.DEFAULT_SALT)
+        return ids, self.serve_binned(xb)
+
     # ------------------------------------------------------------ reporting
     def stats_summary(self) -> dict:
         """p50/p95 latency + aggregate throughput over recorded waves.
@@ -627,6 +645,11 @@ class LinearServer(ModelServer):
 
     def _prep(self, x_raw: np.ndarray) -> np.ndarray:
         return self.model._standardized(self.model._blocks(x_raw))
+
+    def serve_parties(self, blocks, *, salt=None):
+        raise NotImplementedError(
+            "party-block serving is tree-family only for now (the F-LR "
+            "request path standardizes raw blocks, not binned ones)")
 
     def _bound_fp(self) -> int | None:
         return int(self.w.shape[-1])             # fit-time padded width

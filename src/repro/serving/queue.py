@@ -81,6 +81,24 @@ class RequestQueue:
         self._next_id += 1
         return p.rid
 
+    def submit_parties(self, blocks, *, salt=None):
+        """Enqueue one request arriving as per-party blocks keyed by sample
+        IDs (PartyBlocks/DataSources, matched to fit-time parties by name;
+        rows may be shuffled or superset — they are re-aligned on hashed IDs
+        and non-common rows dropped before the rows enter the pump).
+
+        Returns ``(request_id, ids)``: ``drain()[request_id]`` rows line up
+        with ``ids`` (the canonical aligned ordering).  Alignment + binning
+        happen at submit time — the request must be pinned to an ID ordering
+        before its rows can coalesce into waves."""
+        from repro.core import crypto
+        if self.server.partition is None:
+            raise ValueError("party-block requests need the fit-time "
+                             "VerticalPartition bound to the server")
+        ids, xb = self.server.partition.bin_party_blocks(
+            blocks, salt=salt if salt is not None else crypto.DEFAULT_SALT)
+        return self.submit(xb, binned=True), ids
+
     def _next_wave(self):
         """Coalesce the next wave across request boundaries (host phase).
 

@@ -26,6 +26,27 @@ def test_histogram_pallas_matches_ref(n, f, b, l, c):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("platform,want", [
+    ("cpu", "scatter"),          # generic host: scatter-add lowering
+    ("gpu", "segment_sum"),      # tuned unsorted-segment reduction
+    ("cuda", "segment_sum"),
+    ("rocm", "segment_sum"),
+    ("tpu", "pallas"),           # compiled Pallas kernel
+])
+def test_auto_backend_resolution_per_platform(monkeypatch, platform, want):
+    """hist_impl="auto" resolves per detected platform — covered without the
+    hardware by monkeypatching the detection seam."""
+    monkeypatch.setattr(ops, "detected_platform", lambda: platform)
+    assert ops.resolve_backend("auto") == want
+    assert want in ops.available_backends()
+
+
+def test_resolve_backend_passthrough_and_unknown():
+    assert ops.resolve_backend("scatter") == "scatter"
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.resolve_backend("warp-histogram")
+
+
 @pytest.mark.parametrize("impl", ["scatter", "pallas", "ref", "segment_sum"])
 def test_histogram_impl_agreement(impl):
     rng = np.random.default_rng(0)
