@@ -23,6 +23,7 @@ from repro.core.partyblock import CSVSource
 from repro.data import make_classification, make_party_views
 from repro.data.metrics import accuracy
 from repro.federation import Federation
+from repro.serving import ServeConfig
 
 
 def main() -> None:
@@ -63,7 +64,7 @@ def main() -> None:
     assert same, "losslessness violated"
 
     # --- serving: per-party request blocks, out-of-order + superset -------
-    server = fed.serve(model, buckets=(256,))
+    server = fed.serve(model, ServeConfig(buckets=(256,)))
     xt, _ = make_classification(200, 30, 2, seed=7)
     qids = np.array([f"q{i:04d}" for i in range(len(xt))])
     rng = np.random.default_rng(1)

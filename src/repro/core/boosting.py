@@ -85,8 +85,9 @@ class FederatedBoosting:
         for models rehydrated from a checkpoint (Federation.load)."""
         if getattr(self, "_pred_run", None) is None:
             from repro.federation import programs
-            self._pred_run = jax.jit(programs.forest_predict_program(
-                self._sub(), self.params.tree_params(), tree_sharded=False))
+            sub = self._sub()
+            self._pred_run = sub.compile(programs.forest_predict_program(
+                sub, self.params.tree_params(), tree_sharded=False))
         return self._pred_run
 
     def fit(self, partition: VerticalPartition, y: np.ndarray):
@@ -108,9 +109,9 @@ class FederatedBoosting:
         sel = jnp.ones((1, partition.n_features), bool)
         # one tree per round: never shard the T=1 args over a "trees" axis
         sub = self._sub()
-        run = jax.jit(programs.forest_fit_program(sub, tp,
-                                                  tree_sharded=False))
-        self._pred_run = jax.jit(programs.forest_predict_program(
+        run = sub.compile(programs.forest_fit_program(sub, tp,
+                                                      tree_sharded=False))
+        self._pred_run = sub.compile(programs.forest_predict_program(
             sub, tp, tree_sharded=False))
 
         with sub.context():

@@ -26,10 +26,32 @@ import numpy as np
 
 DEFAULT_SALT = "repro-ff"
 
+# preimage "salt:id" -> hexdigest.  The serving request path re-hashes every
+# request's sample IDs for alignment; production traffic revisits the same ID
+# universe wave after wave, so the crypto loop is memoized.  Bounded: when
+# full it is cleared wholesale (IDs re-hash on the next request) rather than
+# growing one entry per distinct ID forever.
+_HASH_CACHE: dict[str, str] = {}
+_HASH_CACHE_MAX = 1 << 20
+
 
 def hash_ids(ids, salt: str = DEFAULT_SALT) -> np.ndarray:
-    """Irreversible sample-ID encryption for alignment (paper: MD5)."""
-    out = [hashlib.sha256(f"{salt}:{i}".encode()).hexdigest() for i in ids]
+    """Irreversible sample-ID encryption for alignment (paper: MD5).
+
+    Memoized per (salt, id) preimage — repeated serving requests over the
+    same ID universe skip the sha256 loop entirely.  Bit-identical to the
+    uncached digest by construction (the cache stores the digest itself)."""
+    cache, sha256 = _HASH_CACHE, hashlib.sha256
+    if len(cache) > _HASH_CACHE_MAX:
+        cache.clear()
+    out = []
+    for i in ids:
+        key = f"{salt}:{i}"
+        h = cache.get(key)
+        if h is None:
+            h = sha256(key.encode()).hexdigest()
+            cache[key] = h
+        out.append(h)
     return np.asarray(out)
 
 

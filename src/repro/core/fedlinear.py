@@ -127,12 +127,11 @@ class FederatedLinear:
     def predict(self, x_parts) -> np.ndarray:
         from repro.federation import programs
         xs = self._standardized(self._blocks(x_parts))
-        fn = lambda xi, w, b: _spmd_predict(xi, w, b, task=self.task)
         sub = self._sub()
+        run = sub.compile(programs.linear_predict_program(sub, self.task))
         with sub.context():
-            out = sub.jit(fn, 2, 1)(
-                jnp.asarray(xs), self._w,
-                self._b[0] if self._b.ndim else self._b)
+            out = run(jnp.asarray(xs), self._w,
+                      self._b[0] if self._b.ndim else self._b)
         return programs.party0(out)
 
     @staticmethod

@@ -77,8 +77,8 @@ class FederatedForest:
         y_stats = impurity.stat_channels(jnp.asarray(y_enc), p.task, p.n_classes)
         weights, feat_sels = self._master_randomness(partition)
 
-        run = jax.jit(programs.forest_fit_program(self._sub(), p,
-                                                  self.hist_impl))
+        run = self._sub().compile(programs.forest_fit_program(self._sub(), p,
+                                                              self.hist_impl))
         with self._sub().context():
             self.trees_ = jax.block_until_ready(run(
                 jnp.asarray(partition.xb), jnp.asarray(partition.feat_gid),
@@ -109,7 +109,8 @@ class FederatedForest:
         assert self.trees_ is not None, "fit first"
         xb_parts = self.partition_.bin_test(np.asarray(x_test))
         with self._sub().context():
-            out = jax.jit(program)(self.trees_, jnp.asarray(xb_parts), *shared)
+            out = self._sub().compile(program)(self.trees_,
+                                               jnp.asarray(xb_parts), *shared)
         return self._decode(programs.party0(out))
 
     def predict(self, x_test: np.ndarray) -> np.ndarray:
@@ -168,18 +169,25 @@ class FederatedForest:
         weights, feat_sels = self._master_randomness(partition)
 
         from repro.federation import programs
-        run = jax.jit(programs.forest_fit_program(self._sub(), p,
-                                                  self.hist_impl))
+        run = self._sub().compile(programs.forest_fit_program(self._sub(), p,
+                                                              self.hist_impl))
         chunks: list = []
         done = ckpt.latest_step(ckpt_dir)
         start = 0
         if done is not None:
-            like = jax.eval_shape(
-                run, jax.ShapeDtypeStruct(partition.xb.shape, jnp.uint8),
-                jax.ShapeDtypeStruct(partition.feat_gid.shape, jnp.int32),
-                jax.ShapeDtypeStruct((done, partition.n_features), jnp.bool_),
-                jax.ShapeDtypeStruct((done, partition.n_samples), jnp.float32),
-                jax.ShapeDtypeStruct(y_stats.shape, y_stats.dtype))
+            # PartyTree stack shapes are fully determined by (M, done, params)
+            # — no need to trace the fit program (which the distributed
+            # substrate could not trace anyway).
+            m, nn, c = partition.n_parties, p.n_nodes, p.n_stat_channels
+            sds = jax.ShapeDtypeStruct
+            like = tree.PartyTree(
+                is_leaf=sds((m, done, nn), jnp.bool_),
+                leaf_stats=sds((m, done, nn, c), jnp.float32),
+                has_split=sds((m, done, nn), jnp.bool_),
+                split_floc=sds((m, done, nn), jnp.int32),
+                split_bin=sds((m, done, nn), jnp.int32),
+                owner=sds((m, done, nn), jnp.int32),
+                split_gid=sds((m, done, nn), jnp.int32))
             chunks.append(ckpt.restore_checkpoint(ckpt_dir, done, like))
             start = done
         for lo in range(start, p.n_estimators, trees_per_chunk):

@@ -98,17 +98,10 @@ class VerticalPartition:
                              f"{list(self.party_names)})")
         return self.party_names.index(name)
 
-    def bin_party_blocks(self, blocks, *, salt: str = crypto.DEFAULT_SALT):
-        """Align + bin per-party *request* blocks against this fit-time
-        partition: out-of-order and superset rows are re-aligned on hashed
-        IDs (non-common rows dropped), each block is binned party-locally
-        with its own fit-time boundaries, and the result is the stacked
-        (M, n, Fp) request tensor the serving programs consume.
-
-        Blocks are matched to parties by name when the partition carries
-        ``party_names`` (any input order); otherwise they must arrive in
-        party-axis order.  Returns ``(common_ids, xb_parts)``.
-        """
+    def _match_blocks(self, blocks) -> list:
+        """Resolve request blocks against this partition's parties: matched
+        by name when the partition carries ``party_names`` (any input
+        order), else they must arrive in party-axis order."""
         blocks = resolve_blocks(blocks)
         if self.party_names is not None:
             by_name = {b.name: b for b in blocks}
@@ -119,13 +112,26 @@ class VerticalPartition:
                     f"request blocks must cover exactly the fit-time "
                     f"parties {list(self.party_names)}; missing {missing}, "
                     f"unknown {extra}")
-            blocks = [by_name[n] for n in self.party_names]
-        elif len(blocks) != self.n_parties:
+            return [by_name[n] for n in self.party_names]
+        if len(blocks) != self.n_parties:
             raise ValueError(f"expected {self.n_parties} request blocks, "
                              f"got {len(blocks)}")
+        return blocks
+
+    def raw_party_rows(self, blocks, *, salt: str = crypto.DEFAULT_SALT):
+        """Align per-party *request* blocks against this fit-time partition
+        and return their raw rows: out-of-order and superset rows are
+        re-aligned on hashed IDs (non-common rows dropped) and each block's
+        columns are put in fit-time party-local order (``feature_ids``
+        validated against the fit-time assignment when present).
+
+        Returns ``(common_ids, raw_parts)`` — the canonical aligned IDs and
+        one raw (n, F_i) block per party.  The shared re-alignment step of
+        both serving request paths: tree engines bin these rows
+        (:meth:`bin_party_blocks`), the F-LR engine standardizes them."""
+        blocks = self._match_blocks(blocks)
         common, positions = align_party_blocks(blocks, salt=salt)
-        m, fp = self.feat_gid.shape
-        out = np.zeros((m, len(common), fp), dtype=np.uint8)
+        parts = []
         for i, (b, pos) in enumerate(zip(blocks, positions)):
             gid = self.feat_gid[i][self.feat_gid[i] >= 0]
             x_i = b.x[pos]
@@ -141,6 +147,22 @@ class VerticalPartition:
                 raise ValueError(
                     f"party {b.name!r}: request block has {b.n_features} "
                     f"features but the fit-time partition holds {len(gid)}")
+            parts.append(np.asarray(x_i))
+        return common, parts
+
+    def bin_party_blocks(self, blocks, *, salt: str = crypto.DEFAULT_SALT):
+        """Align + bin per-party *request* blocks against this fit-time
+        partition: the rows from :meth:`raw_party_rows`, binned party-locally
+        with each feature's fit-time boundaries and stacked into the
+        (M, n, Fp) request tensor the serving programs consume.
+
+        Returns ``(common_ids, xb_parts)``.
+        """
+        common, parts = self.raw_party_rows(blocks, salt=salt)
+        m, fp = self.feat_gid.shape
+        out = np.zeros((m, len(common), fp), dtype=np.uint8)
+        for i, x_i in enumerate(parts):
+            gid = self.feat_gid[i][self.feat_gid[i] >= 0]
             out[i, :, : len(gid)] = binning.apply_bins(
                 x_i, self.boundaries[gid])
         return common, out

@@ -87,6 +87,36 @@ def _local_argbest(gains: jnp.ndarray, feat_gid: jnp.ndarray):
     return g, gid, bin_, floc
 
 
+def reduce_level(g_all, gid_all, bin_all, cnt, params: ForestParams):
+    """The paper's master reduce over one level's gathered party bests.
+
+    ``g_all``/``gid_all``/``bin_all`` are the (M, width) stacked per-party
+    best (gain, global feature id, bin) from the local split search; ``cnt``
+    the (width,) shared node sample counts.  Returns
+    ``(do_split, owner_lv, gid_best, bin_best)`` — the decision every party
+    (and the paper's trusted master) computes identically: max gain with the
+    lexicographic tie-break (min gid, then min bin via min owner), gated on
+    the impurity threshold and ``min_samples_split``.
+
+    Pure max/min/compare arithmetic — exact in any execution order — so the
+    in-graph collective build (``build_tree``) and the transport-backed
+    distributed build (federation/distributed.py), which calls this eagerly
+    on gathered numpy arrays, make bit-identical decisions.
+    """
+    g_best = g_all.max(0)
+    elig = (g_all == g_best[None]) & jnp.isfinite(g_all)
+    gid_best = jnp.where(elig, gid_all, _BIG).min(0)
+    sel = elig & (gid_all == gid_best[None])
+    m = g_all.shape[0]
+    owner_lv = jnp.where(sel, jnp.arange(m, dtype=jnp.int32)[:, None],
+                         _BIG).min(0)
+    bin_best = jnp.where(sel, bin_all, _BIG).min(0)
+    thr = max(params.min_impurity_decrease, 1e-9)
+    do_split = (jnp.isfinite(g_best) & (g_best > thr)
+                & (cnt >= params.min_samples_split))
+    return do_split, owner_lv, gid_best, bin_best
+
+
 def _split_search_dense(xb, seg, wstats, fmask, feat_gid, width, params,
                         hist_impl, prev_hist):
     """Seed path: histogram every heap slot of the level at once."""
@@ -243,17 +273,8 @@ def build_tree(xb: jnp.ndarray, feat_gid: jnp.ndarray, feat_sel: jnp.ndarray,
         g_all = lax.all_gather(g_loc, PARTY_AXIS)          # (M, width)
         gid_all = lax.all_gather(gid_loc, PARTY_AXIS)
         bin_all = lax.all_gather(bin_loc, PARTY_AXIS)
-        g_best = g_all.max(0)
-        elig = (g_all == g_best[None]) & jnp.isfinite(g_all)
-        gid_best = jnp.where(elig, gid_all, _BIG).min(0)
-        sel = elig & (gid_all == gid_best[None])
-        m = g_all.shape[0]
-        owner_lv = jnp.where(sel, jnp.arange(m, dtype=jnp.int32)[:, None], _BIG).min(0)
-        bin_best = jnp.where(sel, bin_all, _BIG).min(0)
-
-        thr = max(params.min_impurity_decrease, 1e-9)
-        do_split = (jnp.isfinite(g_best) & (g_best > thr)
-                    & (cnt >= params.min_samples_split))
+        do_split, owner_lv, gid_best, bin_best = reduce_level(
+            g_all, gid_all, bin_all, cnt, params)
         is_leaf = lax.dynamic_update_slice(is_leaf, (cnt > 0) & ~do_split, (off,))
 
         mine = do_split & (owner_lv == me)  # "receive the split message" (Alg.1)

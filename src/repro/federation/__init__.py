@@ -10,9 +10,13 @@ whole federated lifecycle (fit / predict / serve / checkpoint).
     server = fed.serve(model)
 
 Layers:
-  * ``substrate``  — Substrate protocol (SimulatedSubstrate vmap /
-    ShardedSubstrate shard_map) wrapping core/protocol.{run_simulated,
-    run_sharded}; resolved once per session.
+  * ``substrate``  — Substrate protocol + registry (SimulatedSubstrate vmap /
+    ShardedSubstrate shard_map / DistributedSubstrate party-per-process);
+    resolved once per session through ``resolve_substrate``.
+  * ``transport``  — length-prefixed msgpack wire protocol, retry/backoff,
+    circuit breaker (the distributed substrate's fault-tolerance layer).
+  * ``distributed`` / ``party_worker`` — coordinator + per-party worker
+    processes speaking the transport protocol.
   * ``programs``   — substrate-specialized fit/predict closures shared by
     the session, the serving engine, and the dry-run hillclimb.
   * ``estimator``  — the Estimator protocol every model family conforms to
@@ -22,4 +26,5 @@ Layers:
 from repro.federation.estimator import Estimator, FittedModel  # noqa: F401
 from repro.federation.session import Federation  # noqa: F401
 from repro.federation.substrate import (Substrate, SimulatedSubstrate,  # noqa: F401
-                                        ShardedSubstrate, resolve_substrate)
+                                        ShardedSubstrate, SUBSTRATES,
+                                        register_substrate, resolve_substrate)

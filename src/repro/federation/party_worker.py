@@ -1,0 +1,154 @@
+"""The party process: one region's service in the party-per-process substrate.
+
+``worker_main`` dials the coordinator, announces its party index, and serves
+protocol messages until shutdown:
+
+  * ``run``      — execute a registered protocol body (federation/
+    distributed.py: forest fit/predict, F-LR predict, toy conformance),
+    exchanging collectives through :class:`~repro.federation.distributed.Comm`
+    on the same channel.  Body exceptions are reported back with their
+    traceback; an ``abort`` mid-collective drops the run silently.
+  * ``load_block`` / ``hash_block_ids`` / ``bin_block`` — the ingest
+    handshake: the block (raw features, raw IDs, maybe labels) is loaded and
+    *kept here*; only salted hashes, party-locally binned values, and the
+    aligned labels ever go back up the wire.
+  * ``bind``     — cache large per-party operands (model trees, weight
+    blocks) under a bind id so serving calls only ship the request rows.
+  * ``ping``     — health check.
+  * ``chaos``    — arm a one-shot injected fault for the NEXT run message:
+    ``drop_run`` (swallow it), ``delay_run`` (sleep first), ``die``
+    (hard process exit).  Exists for the fault-injection tests.
+
+Workers are daemon processes: if the coordinator dies, so do they.
+"""
+from __future__ import annotations
+
+import os
+import time
+import traceback
+
+import numpy as np
+
+from repro.federation import transport
+
+
+def worker_main(host: str, port: int, index: int) -> None:
+    ch = transport.connect(host, port)
+    ch.send({"op": "hello", "party": index})
+    binds: dict[int, dict] = {}
+    chaos: dict | None = None
+    block = None
+    while True:
+        try:
+            msg = ch.recv(None)
+        except transport.TransportError:
+            return                                  # coordinator is gone
+        op = msg.get("op")
+        if op == "shutdown":
+            return
+        if op == "ping":
+            ch.send({"op": "pong", "party": index,
+                     "nonce": msg.get("nonce")})
+        elif op == "chaos":
+            chaos = {"mode": msg["mode"],
+                     "seconds": float(msg.get("seconds") or 0.0)}
+            ch.send({"op": "chaos_ack", "nonce": msg.get("nonce")})
+        elif op == "bind":
+            binds[msg["bind"]] = msg.get("args") or {}
+            ch.send({"op": "bind_ack", "nonce": msg.get("nonce")})
+        elif op == "run":
+            if chaos is not None:
+                mode, secs = chaos["mode"], chaos["seconds"]
+                chaos = None                        # one-shot
+                if mode == "drop_run":
+                    continue
+                if mode == "die":
+                    os._exit(1)
+                if mode == "delay_run":
+                    time.sleep(secs)
+            _handle_run(ch, msg, index, binds)
+        elif op in ("load_block", "hash_block_ids", "bin_block"):
+            block = _handle_ingest(ch, msg, block, index)
+        # anything else (stale abort/coll_result of a superseded run): skip
+
+
+def _handle_run(ch, msg, index, binds) -> None:
+    from repro.federation import distributed
+    rid = msg["run"]
+    try:
+        body = distributed.DIST_PROGRAMS.get(msg["name"])
+        if body is None:
+            raise transport.ProtocolError(
+                f"unknown protocol program {msg['name']!r} "
+                f"(have {sorted(distributed.DIST_PROGRAMS)})")
+        args = list(msg.get("args") or ())
+        for pos, val in (binds.get(msg.get("bound")) or {}).items():
+            args[int(pos)] = val
+        comm = distributed.Comm(ch, rid, msg["party_index"],
+                                msg["n_parties"])
+        out = body(comm, msg.get("payload") or {}, *args)
+        ch.send({"op": "result", "run": rid, "data": out})
+    except distributed.RunAborted:
+        pass                                        # superseded: back to idle
+    except Exception as e:                          # report, don't die
+        try:
+            ch.send({"op": "error", "run": rid,
+                     "message": f"{type(e).__name__}: {e}",
+                     "traceback": traceback.format_exc()})
+        except transport.TransportError:
+            pass
+
+
+def _handle_ingest(ch, msg, block, index):
+    """The party side of distributed_ingest; returns the (new) held block."""
+    from repro.core import binning
+    from repro.core.partyblock import CSVSource, PartyBlock
+    op, nonce = msg["op"], msg.get("nonce")
+    try:
+        if op == "load_block":
+            spec = msg["source"]
+            if spec["kind"] == "csv":
+                block = CSVSource(
+                    path=spec["path"], name=spec.get("name"),
+                    id_column=spec.get("id_column", "id"),
+                    label_column=spec.get("label_column", "label"),
+                    delimiter=spec.get("delimiter", ",")).load()
+            else:
+                names = spec.get("feature_names")
+                block = PartyBlock(
+                    name=spec["name"], x=spec["x"], ids=spec["ids"],
+                    y=spec.get("y"), feature_ids=spec.get("feature_ids"),
+                    feature_names=tuple(names) if names else None)
+            ch.send({"op": "block_meta", "nonce": nonce,
+                     "name": block.name, "n_features": block.n_features,
+                     "feature_ids": block.feature_ids,
+                     "has_y": block.y is not None})
+        elif op == "hash_block_ids":
+            if block is None:
+                raise RuntimeError("no block loaded (load_block first)")
+            if np.unique(block.ids).size != block.ids.size:
+                raise ValueError(
+                    f"party {block.name!r} has duplicate sample IDs: "
+                    f"alignment would be ambiguous — deduplicate before "
+                    f"ingest")
+            ch.send({"op": "hashes", "nonce": nonce,
+                     "hashes": block.hashed_ids(msg["salt"])})
+        else:                                       # bin_block
+            if block is None:
+                raise RuntimeError("no block loaded (load_block first)")
+            pos = np.asarray(msg["positions"], np.int64)
+            x_i = block.x[pos]
+            if block.feature_ids is not None:       # party-local order ->
+                x_i = x_i[:, np.argsort(block.feature_ids)]  # ascending gid
+            xb_i, b_i = binning.bin_dataset(x_i, int(msg["n_bins"]))
+            ch.send({"op": "binned", "nonce": nonce, "xb": xb_i,
+                     "boundaries": b_i,
+                     "y": block.y[pos] if block.y is not None else None})
+    except Exception as e:
+        try:
+            ch.send({"op": "error", "nonce": nonce,
+                     "message": f"{type(e).__name__}: {e}",
+                     "traceback": traceback.format_exc()})
+        except transport.TransportError:
+            pass
+    return block

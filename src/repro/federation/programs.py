@@ -44,7 +44,10 @@ def forest_fit_program(substrate, params: ForestParams,
     (boosting fits one tree per round)."""
     fit_fn = tree.fit_spmd(params, hist_impl)
     if substrate.mesh is None:
-        return substrate.program(fit_fn, 2, 3)
+        from repro.federation import distributed
+        return substrate.program(
+            fit_fn, 2, 3,
+            distributed=distributed.forest_fit_spec(params, hist_impl))
     tree_ax = substrate.tree_axis if tree_sharded else None
     per_tree = P(tree_ax) if tree_ax else P()
     out = P(PARTY_AXIS, tree_ax) if tree_ax else P(PARTY_AXIS)
@@ -56,12 +59,16 @@ def forest_fit_program(substrate, params: ForestParams,
 def forest_predict_program(substrate, params: ForestParams, *,
                            compact: bool = False, mask_dtype=jnp.int32,
                            vote_impl: str = "einsum",
-                           tree_sharded: bool = True):
+                           tree_sharded: bool = True,
+                           parties=None):
     """fn(trees, xb_test[, leaf_idx]) — the one-round forest prediction.
 
     ``compact=True`` adds the LeafTable's ``leaf_idx`` as a trailing shared
     arg (bit-identical outputs; psum/vote over live-leaf columns only).
-    ``tree_sharded=False``: see forest_fit_program.
+    ``tree_sharded=False``: see forest_fit_program.  ``parties`` restricts
+    the protocol to a subset of party indices — the distributed substrate's
+    degraded-serving path (in-process substrates always run every party and
+    ignore it).
     """
     p = params
     n_shared = 1 if compact else 0
@@ -71,7 +78,13 @@ def forest_predict_program(substrate, params: ForestParams, *,
             return prediction.forest_predict_oneround(
                 trees, xbt, p, aggregate=True, mask_dtype=mask_dtype,
                 vote_impl=vote_impl, leaf_idx=shared[0] if shared else None)
-        return substrate.program(fn, 2, n_shared)
+        from repro.federation import distributed
+        return substrate.program(
+            fn, 2, n_shared,
+            distributed=distributed.forest_predict_spec(
+                p, compact=compact, mask_dtype=mask_dtype,
+                vote_impl=vote_impl),
+            parties=parties)
 
     # Sharded: trees live sharded over (parties, trees); each shard emits its
     # local per-tree outputs and the forest vote reduces across tree shards.
@@ -138,7 +151,9 @@ def linear_predict_program(substrate, task: str):
     def fn(x_i, w_i, b):
         from repro.core.fedlinear import _spmd_predict
         return _spmd_predict(x_i, w_i, b, task=task)
-    return substrate.program(fn, 2, 1)
+    from repro.federation import distributed
+    return substrate.program(fn, 2, 1,
+                             distributed=distributed.linear_predict_spec(task))
 
 
 def forest_predict_classical_program(substrate, params: ForestParams):

@@ -66,14 +66,15 @@ class Federation:
 
     def __init__(self, parties: int = 2, substrate: str | Substrate = "simulated",
                  mesh=None, hist_impl: str | None = None, n_bins: int = 32,
-                 seed: int = 0):
+                 seed: int = 0, **substrate_opts):
         self.parties = int(parties)
         self.mesh = mesh
         self.hist_impl = hist_impl
         self.n_bins = int(n_bins)
         self.seed = int(seed)
         self.substrate = resolve_substrate(substrate, mesh,
-                                           parties=self.parties)
+                                           parties=self.parties,
+                                           **substrate_opts)
         self._partition: VerticalPartition | None = None
         self._y: np.ndarray | None = None
         # sample IDs of the ingested training set in aligned (row) order —
@@ -132,8 +133,16 @@ class Federation:
             if len(data) != self.parties:
                 raise ValueError(f"got {len(data)} party blocks but the "
                                  f"session declares {self.parties} parties")
-            part, y_aligned, ids = partition_from_blocks(
-                data, n_bins or self.n_bins, salt=salt, validate=validate)
+            # a transport-backed substrate ingests party-side: blocks load,
+            # hash and bin inside each party's own process, and only hashes
+            # + binned values cross the wire
+            ingest_blocks = getattr(self.substrate, "ingest_blocks", None)
+            if ingest_blocks is not None:
+                part, y_aligned, ids = ingest_blocks(
+                    data, n_bins or self.n_bins, salt=salt, validate=validate)
+            else:
+                part, y_aligned, ids = partition_from_blocks(
+                    data, n_bins or self.n_bins, salt=salt, validate=validate)
             self._partition, self._y = part, y_aligned
             self.aligned_ids_ = ids
             return part
@@ -247,55 +256,64 @@ class Federation:
         return table
 
     # ----------------------------------------------------------------- serve
-    def serve(self, model: Estimator, *, buckets=None, compact: bool = True,
-              max_inflight: int = 1, autotune_buckets: bool = False,
-              traffic=None, server_cls=None, **server_kw):
+    def serve(self, model: Estimator, config=None, *, traffic=None,
+              server_cls=None, **server_kw):
         """Stand up a serving engine for ``model``, pre-bound to the
-        session's mesh (sharded substrate -> shard_map serving; simulated ->
-        vmap).  The engine class is dispatched on the model family
-        (forest -> ForestServer, boosting -> BoostingServer, F-LR ->
-        LinearServer — serving/engine.server_for).
+        session's substrate (sharded -> shard_map serving; simulated ->
+        vmap; distributed -> waves dispatched to the party processes).
+        The engine class is dispatched on the model family (forest ->
+        ForestServer, boosting -> BoostingServer, F-LR -> LinearServer —
+        serving/engine.server_for).
 
-        ``max_inflight`` sets the async wave-ring depth (1 = synchronous
-        waves).  ``autotune_buckets=True`` derives the bucket set from
-        observed traffic instead of the warm-start guess: pass ``traffic``
+        ``config`` is a :class:`repro.serving.ServeConfig` — buckets,
+        compact, max_inflight, autotune_buckets, allow_degraded in one
+        hashable value object that doubles as the server-cache key.  The
+        pre-config keywords (``serve(model, buckets=..., compact=...)``)
+        still work through a one-shot adapter that emits a
+        DeprecationWarning.
+
+        ``config.autotune_buckets`` derives the bucket set from observed
+        traffic instead of the warm-start guess: pass ``traffic``
         (wave_stats / request_stats records, or plain row counts) to tune a
         fresh server up front; on a cached server the engine's own
         ``wave_stats`` are used, and the bucket set is refreshed in place
         through ``set_buckets`` — the same way ``trees_`` changes refresh
         plans, with the compile-once contract holding per autotune epoch.
 
-        Repeated calls with the same (model, buckets, compact, max_inflight)
-        return the same server — compiled bucket executables are reused —
-        unless the model's state changed, in which case the server is
-        refreshed in place (plan rebuilt, stale executables dropped)."""
+        Repeated calls with an equal (model, config) return the same server
+        — compiled bucket executables are reused — unless the model's state
+        changed, in which case the server is refreshed in place (plan
+        rebuilt, stale executables dropped)."""
         from repro.serving import autotune, engine
+        from repro.serving.config import adapt_legacy_kwargs
+        config = adapt_legacy_kwargs(config, server_kw)
         cls = server_cls or engine.server_for(model)
-        warm = tuple(buckets) if buckets is not None \
-            else engine.DEFAULT_BUCKETS
+        warm = config.resolved_buckets(engine.DEFAULT_BUCKETS)
         # only the knob-free path is cached: extra server_kw (vote_impl,
         # mask_dtype, ...) isn't part of the key, and silently returning a
         # server built with different knobs would drop the request
         cacheable = not server_kw
-        key = (id(model), ("autotune",) + warm if autotune_buckets else warm,
-               compact, int(max_inflight), cls)
+        key = (id(model), config, cls)
         cached = self._servers.get(key) if cacheable else None
         if cached is not None and cached[0] is model:
             server, token = cached[1], cached[2]
             if not _token_matches(token, cls.model_token(model)):
                 server.refresh_from(model)
                 self._servers[key] = (model, server, cls.model_token(model))
-            if autotune_buckets:
+            if config.autotune_buckets:
                 source = traffic if traffic is not None else server.wave_stats
                 tuned = autotune.autotune_buckets(source, warm=server.buckets)
                 if tuned != server.buckets:
                     server.set_buckets(tuned)
             return server
-        if autotune_buckets and traffic is not None:
+        if config.autotune_buckets and traffic is not None:
             warm = autotune.autotune_buckets(traffic, warm=warm)
-        server_kw.setdefault("mesh", self.substrate.mesh)
-        server = cls.from_model(model, buckets=warm, compact=compact,
-                                max_inflight=max_inflight, **server_kw)
+        if "mesh" not in server_kw:
+            server_kw.setdefault("substrate", self.substrate)
+        if issubclass(cls, engine.ForestServer):
+            server_kw.setdefault("allow_degraded", config.allow_degraded)
+        server = cls.from_model(model, buckets=warm, compact=config.compact,
+                                max_inflight=config.max_inflight, **server_kw)
         if cacheable:
             self._servers[key] = (model, server, cls.model_token(model))
         return server
@@ -451,6 +469,19 @@ class Federation:
         programs.forest_predict_program for the knobs)."""
         return programs.forest_predict_program(
             self.substrate, self._apply_session(spec), **kw)
+
+    # -------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Tear down the session's substrate — a distributed session's party
+        processes and sockets; in-process substrates have nothing to tear
+        down (Substrate.shutdown is a no-op there)."""
+        self.substrate.shutdown()
+
+    def __enter__(self) -> "Federation":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return (f"Federation(parties={self.parties}, "

@@ -1,0 +1,303 @@
+"""Wire transport for the party-per-process substrate.
+
+The paper's deployed system runs each regional party as its own service and
+moves only protocol messages — hashed IDs, binned values, masked statistics —
+across the network.  This module is that wire layer, kept deliberately small:
+
+  * **framing** — every message is a 4-byte big-endian length prefix followed
+    by a msgpack payload.  ndarrays ride as ``{dtype, shape, raw bytes}``
+    (no pickle on the wire); NamedTuple pytrees (PartyTree) register a codec
+    via :func:`register_namedtuple`.
+  * **Channel** — a connected socket with ``send``/``recv`` of framed
+    messages and a per-round-trip timeout budget: a peer that does not
+    produce a complete frame within the budget raises :class:`PartyTimeout`,
+    a closed peer raises :class:`PartyDead`.
+  * **RetryPolicy** — jittered exponential backoff between attempts; the
+    jitter stream is seeded so fault-injection tests observe deterministic
+    sleep schedules (the sleeper is injectable for the same reason).
+  * **CircuitBreaker** — per-party consecutive-failure counter; after
+    ``threshold`` consecutive failures the circuit opens and further calls
+    fail fast with :class:`CircuitOpenError` until ``reset`` (success closes
+    it again below the threshold).
+
+Nothing here imports jax or the protocol code — the coordinator/worker logic
+that gives these messages meaning lives in federation/distributed.py and
+federation/party_worker.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+import struct
+import time
+from typing import Any, Callable
+
+import msgpack
+import numpy as np
+
+_LEN = struct.Struct(">I")
+_MAX_FRAME = 1 << 31  # sanity bound; a larger frame means a corrupt stream
+
+
+# --------------------------------------------------------------------- errors
+class TransportError(RuntimeError):
+    """Base class for wire-level failures."""
+
+
+class PartyUnavailableError(TransportError):
+    """One or more parties could not complete a protocol round.
+
+    ``parties`` holds the party indices the failure is attributed to —
+    the serving layer uses them to pick the surviving-tree degraded path.
+    """
+
+    def __init__(self, message: str, parties=()):  # noqa: D107
+        super().__init__(message)
+        self.parties = tuple(parties)
+
+
+class PartyTimeout(PartyUnavailableError):
+    """A party did not answer within the round-trip timeout budget."""
+
+
+class PartyDead(PartyUnavailableError):
+    """A party's connection is gone (process exit, socket close)."""
+
+
+class CircuitOpenError(PartyUnavailableError):
+    """A party's circuit breaker is open: failing fast without dispatch."""
+
+
+class ProtocolError(TransportError):
+    """A peer answered with an out-of-protocol message."""
+
+
+# ---------------------------------------------------------------------- codec
+_ND = "__nd__"
+_NT = "__nt__"
+_NAMEDTUPLES: dict[str, type] = {}
+
+
+def register_namedtuple(cls: type) -> type:
+    """Allow a NamedTuple type (e.g. core.tree.PartyTree) on the wire: it is
+    encoded as its field dict plus the type name, and decoded back through
+    this registry — the receiving process must register the same type."""
+    _NAMEDTUPLES[cls.__name__] = cls
+    return cls
+
+
+def _default(obj):
+    if isinstance(obj, tuple) and hasattr(obj, "_fields"):  # NamedTuple
+        name = type(obj).__name__
+        if name not in _NAMEDTUPLES:
+            raise TypeError(f"NamedTuple {name} is not wire-registered "
+                            f"(transport.register_namedtuple)")
+        return {_NT: name, "f": {k: v for k, v in obj._asdict().items()}}
+    if isinstance(obj, np.generic):
+        return obj.item()
+    a = np.asarray(obj)
+    if a.dtype == object:
+        raise TypeError(f"cannot encode {type(obj).__name__} for the wire")
+    return {_ND: True, "d": a.dtype.str, "s": list(a.shape),
+            "b": a.tobytes()}
+
+
+def _object_hook(obj: dict):
+    if _ND in obj:
+        a = np.frombuffer(obj["b"], dtype=np.dtype(obj["d"]))
+        return a.reshape(obj["s"]).copy()
+    if _NT in obj:
+        cls = _NAMEDTUPLES.get(obj[_NT])
+        if cls is None:
+            raise ProtocolError(f"unregistered NamedTuple {obj[_NT]!r} on "
+                                f"the wire")
+        return cls(**obj["f"])
+    return obj
+
+
+def _encode(obj):
+    """Pre-walk for types msgpack would serialize natively but wrongly:
+    a NamedTuple IS a tuple, so the ``default`` hook never sees it."""
+    if isinstance(obj, tuple) and hasattr(obj, "_fields"):
+        name = type(obj).__name__
+        if name not in _NAMEDTUPLES:
+            raise TypeError(f"NamedTuple {name} is not wire-registered "
+                            f"(transport.register_namedtuple)")
+        return {_NT: name, "f": {k: _encode(v)
+                                 for k, v in obj._asdict().items()}}
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v) for v in obj]
+    if isinstance(obj, dict):
+        return {k: _encode(v) for k, v in obj.items()}
+    return obj
+
+
+def pack(msg: dict) -> bytes:
+    body = msgpack.packb(_encode(msg), default=_default, use_bin_type=True)
+    return _LEN.pack(len(body)) + body
+
+
+def unpack(body: bytes) -> dict:
+    return msgpack.unpackb(body, object_hook=_object_hook, raw=False,
+                           strict_map_key=False)
+
+
+# -------------------------------------------------------------------- channel
+class Channel:
+    """A connected message stream with per-round-trip timeout budgets."""
+
+    def __init__(self, sock: socket.socket, *, party: int | None = None):
+        self.sock = sock
+        self.party = party            # peer's party index, when known
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._rbuf = b""
+
+    def send(self, msg: dict) -> None:
+        try:
+            self.sock.sendall(pack(msg))
+        except (OSError, ValueError) as e:
+            raise PartyDead(f"party {self.party}: send failed ({e})",
+                            parties=self._who()) from e
+
+    def recv(self, timeout: float | None = None) -> dict:
+        """Receive one framed message; ``timeout`` bounds the WHOLE frame."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        header = self._read(4, deadline)
+        (n,) = _LEN.unpack(header)
+        if n > _MAX_FRAME:
+            raise ProtocolError(f"party {self.party}: oversized frame ({n})")
+        return unpack(self._read(n, deadline))
+
+    def _read(self, n: int, deadline: float | None) -> bytes:
+        buf = self._rbuf
+        while len(buf) < n:
+            if deadline is None:
+                self.sock.settimeout(None)
+            else:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    self._rbuf = buf
+                    raise PartyTimeout(
+                        f"party {self.party}: no reply within the "
+                        f"round-trip budget", parties=self._who())
+                self.sock.settimeout(left)
+            try:
+                chunk = self.sock.recv(1 << 20)
+            except (socket.timeout, TimeoutError) as e:
+                self._rbuf = buf
+                raise PartyTimeout(
+                    f"party {self.party}: no reply within the round-trip "
+                    f"budget", parties=self._who()) from e
+            except OSError as e:
+                raise PartyDead(f"party {self.party}: connection lost ({e})",
+                                parties=self._who()) from e
+            if not chunk:
+                raise PartyDead(f"party {self.party}: connection closed",
+                                parties=self._who())
+            buf += chunk
+        self._rbuf = buf[n:]
+        return buf[:n]
+
+    def _who(self) -> tuple:
+        return () if self.party is None else (self.party,)
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+def connect(host: str, port: int, *, timeout: float = 10.0,
+            retry: "RetryPolicy | None" = None) -> Channel:
+    """Dial a coordinator/worker endpoint, retrying per the policy."""
+    policy = retry or RetryPolicy()
+    last: Exception | None = None
+    for attempt in range(policy.attempts):
+        try:
+            sock = socket.create_connection((host, port), timeout=timeout)
+            sock.settimeout(None)
+            return Channel(sock)
+        except OSError as e:
+            last = e
+            if attempt + 1 < policy.attempts:
+                policy.backoff(attempt)
+    raise PartyDead(f"connect to {host}:{port} failed after "
+                    f"{policy.attempts} attempts ({last})")
+
+
+# ------------------------------------------------------------ fault tolerance
+@dataclasses.dataclass
+class RetryPolicy:
+    """Jittered exponential backoff: delay_k = base * mult^k * (1 + j*u_k).
+
+    ``seed`` makes the jitter stream deterministic and ``sleeper`` is
+    injectable, so fault-injection tests can assert the exact backoff
+    schedule (``slept`` records every delay handed to the sleeper).
+    """
+
+    attempts: int = 3
+    base: float = 0.05
+    mult: float = 2.0
+    jitter: float = 0.5
+    max_delay: float = 5.0
+    seed: int = 0
+    sleeper: Callable[[float], None] = time.sleep
+
+    def __post_init__(self) -> None:
+        if self.attempts < 1:
+            raise ValueError("attempts must be >= 1")
+        self._rng = np.random.default_rng(self.seed)
+        self.slept: list[float] = []
+
+    def delay(self, attempt: int) -> float:
+        raw = self.base * self.mult ** attempt
+        raw *= 1.0 + self.jitter * float(self._rng.random())
+        return min(raw, self.max_delay)
+
+    def backoff(self, attempt: int) -> None:
+        d = self.delay(attempt)
+        self.slept.append(d)
+        self.sleeper(d)
+
+
+class CircuitBreaker:
+    """Per-party consecutive-failure breaker.
+
+    ``record_failure`` K times in a row opens party i's circuit; ``allow``
+    then raises :class:`CircuitOpenError` so callers fail fast instead of
+    burning a timeout budget per request on a party that is plainly down.
+    A recorded success closes the circuit again (the coordinator records one
+    after every completed round-trip)."""
+
+    def __init__(self, threshold: int = 3):
+        if threshold < 1:
+            raise ValueError("breaker threshold must be >= 1")
+        self.threshold = int(threshold)
+        self._fails: dict[int, int] = {}
+
+    def record_failure(self, party: int) -> None:
+        self._fails[party] = self._fails.get(party, 0) + 1
+
+    def record_success(self, party: int) -> None:
+        self._fails.pop(party, None)
+
+    def is_open(self, party: int) -> bool:
+        return self._fails.get(party, 0) >= self.threshold
+
+    def open_parties(self) -> tuple[int, ...]:
+        return tuple(sorted(p for p, n in self._fails.items()
+                            if n >= self.threshold))
+
+    def allow(self, party: int) -> None:
+        if self.is_open(party):
+            raise CircuitOpenError(
+                f"party {party}: circuit open after "
+                f"{self._fails[party]} consecutive failures",
+                parties=(party,))
+
+    def reset(self, party: int | None = None) -> None:
+        if party is None:
+            self._fails.clear()
+        else:
+            self._fails.pop(party, None)

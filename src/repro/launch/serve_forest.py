@@ -34,7 +34,7 @@ import numpy as np
 from repro.core import ForestParams, PartyBlock
 from repro.data import make_classification
 from repro.federation import Federation
-from repro.serving import RequestQueue
+from repro.serving import RequestQueue, ServeConfig
 
 
 def party_request(part, x_rows: np.ndarray, ids: np.ndarray,
@@ -115,8 +115,9 @@ def main() -> None:
         model = fed.load(args.ckpt_dir, p)
         print(f"restored PartyTree stack from {args.ckpt_dir}")
 
-    server = fed.serve(model, compact=not args.dense, buckets=buckets,
-                       max_inflight=args.async_waves)
+    server = fed.serve(model, ServeConfig(buckets=buckets,
+                                          compact=not args.dense,
+                                          max_inflight=args.async_waves))
     if server.leaf_table is not None:
         from repro.serving.plan import compaction_ratio
         print(f"leaf table: {server.leaf_table.capacity} slots vs "
@@ -148,10 +149,10 @@ def main() -> None:
               f"{dt:.3f}s ({rows / max(dt, 1e-9):.0f} rows/s, "
               f"inflight<={server.max_inflight})")
         if args.autotune and rnd == 0:
-            server = fed.serve(model, compact=not args.dense,
-                               buckets=buckets, autotune_buckets=True,
-                               max_inflight=args.async_waves,
-                               traffic=queue.request_stats)
+            server = fed.serve(model, ServeConfig(
+                buckets=buckets, compact=not args.dense,
+                max_inflight=args.async_waves, autotune_buckets=True),
+                traffic=queue.request_stats)
             server.warmup()
             queue = RequestQueue(server)
             print(f"autotune: buckets {buckets} -> {server.buckets} "

@@ -35,6 +35,7 @@ keeps the LeafTable plan fresh across model updates),
 ``benchmarks/serving_bench.py`` (dense vs leaf-compacted rows/s, p50/p95).
 """
 from repro.serving.autotune import autotune_buckets, observed_row_counts  # noqa: F401
+from repro.serving.config import ServeConfig  # noqa: F401
 from repro.serving.engine import (BoostingServer, ForestServer,  # noqa: F401
                                   InFlightWave, LinearServer, ModelServer,
                                   load_forest_trees, server_for)

@@ -52,7 +52,9 @@ from repro.core.tree import PartyTree
 from repro.core.types import ForestParams
 from repro.federation import programs
 from repro.federation.substrate import ShardedSubstrate, SimulatedSubstrate
+from repro.federation.transport import PartyUnavailableError
 from repro.serving import plan
+from repro.serving.config import ServeConfig
 
 DEFAULT_BUCKETS = (32, 256, 2048)
 
@@ -90,6 +92,9 @@ class InFlightWave:
     n_rows: int
     t0: float
     inflight_at_dispatch: int = 1
+    # extra per-wave facts recorded by the dispatch path (e.g. the degraded
+    # serving flag + dead-party list) — merged into the wave_stats entry
+    info: dict | None = None
 
 
 class ModelServer:
@@ -107,13 +112,18 @@ class ModelServer:
     decode, padding strip, stats, and bucket retuning.
     """
 
-    def _init_engine(self, *, buckets, mesh=None, partition=None,
-                     decode: Callable | None = None, max_inflight: int = 1,
+    def _init_engine(self, *, buckets, mesh=None, substrate=None,
+                     partition=None, decode: Callable | None = None,
+                     max_inflight: int = 1, allow_degraded: bool = False,
                      n_features_per_party: int | None = None) -> None:
         self.buckets = self._check_buckets(buckets)
-        self.substrate = (ShardedSubstrate(mesh) if mesh is not None
-                          else SimulatedSubstrate())
-        self.mesh = mesh
+        if substrate is not None:
+            self.substrate = substrate
+        else:
+            self.substrate = (ShardedSubstrate(mesh) if mesh is not None
+                              else SimulatedSubstrate())
+        self.mesh = self.substrate.mesh
+        self.allow_degraded = bool(allow_degraded)
         self.partition = partition
         self.decode = decode
         if int(max_inflight) < 1:
@@ -125,6 +135,7 @@ class ModelServer:
         self._exec: dict[int, Callable] = {}
         self._request_fp = n_features_per_party
         self._n_inflight = 0
+        self._wave_info = None
 
     @staticmethod
     def _check_buckets(buckets) -> tuple[int, ...]:
@@ -164,7 +175,10 @@ class ModelServer:
                         self._request_dtype())
         fn = self._program()
         with self.substrate.context():
-            compiled = jax.jit(fn).lower(*self._wave_args(xbt)).compile()
+            # the substrate owns what "compiled" means: AOT lower+compile for
+            # in-process substrates, bind (model state shipped once to the
+            # party processes) for the message-passing one
+            compiled = self.substrate.aot_compile(fn, *self._wave_args(xbt))
         self.compile_count += 1
         self._exec[bucket] = compiled
         return compiled
@@ -244,10 +258,18 @@ class ModelServer:
         if n < bucket:
             xb_parts = np.pad(xb_parts, ((0, 0), (0, bucket - n), (0, 0)))
         t0 = time.perf_counter()
-        out = compiled(*self._wave_args(jnp.asarray(xb_parts)))
+        self._wave_info = None
+        out = self._execute(compiled, jnp.asarray(xb_parts))
         self._n_inflight += 1
         return InFlightWave(out=out, bucket=bucket, n_rows=n, t0=t0,
-                            inflight_at_dispatch=self._n_inflight)
+                            inflight_at_dispatch=self._n_inflight,
+                            info=self._wave_info)
+
+    def _execute(self, compiled, xbt):
+        """Launch one compiled wave — the failure seam.  ForestServer
+        overrides this to fall back to degraded serving when a distributed
+        party is unavailable mid-round."""
+        return compiled(*self._wave_args(xbt))
 
     def collect(self, wave: InFlightWave) -> np.ndarray:
         """Block on a dispatched wave; record stats, strip padding, decode.
@@ -258,13 +280,16 @@ class ModelServer:
         out = jax.block_until_ready(wave.out)
         dt = time.perf_counter() - wave.t0
         self._n_inflight -= 1
-        self.wave_stats.append({
+        entry = {
             "bucket": wave.bucket, "n_rows": wave.n_rows,
             "t0": wave.t0, "latency_s": dt,
             "rows_per_s": wave.n_rows / max(dt, 1e-12),
             "inflight": wave.inflight_at_dispatch,
             "comm_bytes": self._wave_comm_bytes(wave.bucket),
-        })
+        }
+        if wave.info:
+            entry.update(wave.info)
+        self.wave_stats.append(entry)
         return self._finalize(self._strip(out, wave.n_rows))
 
     def abandon(self, waves) -> None:
@@ -414,9 +439,10 @@ class ForestServer(ModelServer):
     def __init__(self, trees: PartyTree, params: ForestParams, *,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  compact: bool = True, mask_dtype=jnp.uint8,
-                 vote_impl: str = "einsum", mesh=None,
+                 vote_impl: str = "einsum", mesh=None, substrate=None,
                  partition=None, decode: Callable | None = None,
                  leaf_pad_multiple: int = 8, max_inflight: int = 1,
+                 allow_degraded: bool = False,
                  n_features_per_party: int | None = None):
         self.params = params
         self.compact = compact
@@ -424,8 +450,9 @@ class ForestServer(ModelServer):
         self.vote_impl = vote_impl
         self._leaf_pad = leaf_pad_multiple
         self._init_engine(
-            buckets=buckets, mesh=mesh, partition=partition, decode=decode,
-            max_inflight=max_inflight,
+            buckets=buckets, mesh=mesh, substrate=substrate,
+            partition=partition, decode=decode, max_inflight=max_inflight,
+            allow_degraded=allow_degraded,
             n_features_per_party=n_features_per_party)
         self.refresh(trees)
 
@@ -461,10 +488,14 @@ class ForestServer(ModelServer):
         model = fed.load(ckpt_dir, params, step=step, trees=trees,
                          partition=kw.pop("partition", None),
                          decode=kw.pop("decode", None), **model_kw)
-        compact = kw.pop("compact", True)
-        buckets = kw.pop("buckets", None)
-        return fed.serve(model, buckets=buckets, compact=compact,
-                         server_cls=cls, **kw)
+        config = kw.pop("config", None)
+        if config is None:
+            config = ServeConfig(
+                buckets=kw.pop("buckets", None),
+                compact=kw.pop("compact", True),
+                max_inflight=kw.pop("max_inflight", 1),
+                allow_degraded=kw.pop("allow_degraded", False))
+        return fed.serve(model, config, server_cls=cls, **kw)
 
     # -------------------------------------------------------- model binding
     @staticmethod
@@ -493,7 +524,57 @@ class ForestServer(ModelServer):
             self.trees, self.params, pad_multiple=self._leaf_pad)
             if self.compact else None)
         self._exec = {}
+        # alive-party tuple -> (bound runner, sliced trees, sliced leaf_idx,
+        # surviving tree count): the degraded-serving fast path
+        self._degraded: dict[tuple, tuple] = {}
         return self
+
+    # ------------------------------------------------- degraded serving
+    def _execute(self, compiled, xbt):
+        try:
+            return super()._execute(compiled, xbt)
+        except PartyUnavailableError as err:
+            if not self.allow_degraded or not err.parties:
+                raise
+            return self._execute_degraded(err, xbt)
+
+    def _execute_degraded(self, err: PartyUnavailableError, xbt):
+        """Answer a wave from the trees whose split paths avoid every dead
+        party's features (their membership masks over the surviving parties
+        intersect to exactly the full-federation leaf assignment, so the
+        served predictions are exact — just from a smaller forest).  The
+        wave is flagged ``degraded`` with the dead-party list in
+        wave_stats."""
+        from repro.federation import distributed
+        sub = self.substrate
+        known = getattr(sub, "unavailable_parties", lambda: ())()
+        dead = tuple(sorted(set(err.parties) | set(known)))
+        alive = tuple(p for p in range(self.n_parties) if p not in dead)
+        if not alive:
+            raise err
+        cached = self._degraded.get(alive)
+        if cached is None:
+            sel = distributed.surviving_trees(self.trees, dead)
+            if sel.size == 0:
+                raise PartyUnavailableError(
+                    f"cannot serve degraded: every tree splits on a dead "
+                    f"party's features (dead={list(dead)})", parties=dead)
+            trees = jax.tree.map(lambda a: a[:, sel], self.trees)
+            lt = (None if self.leaf_table is None
+                  else self.leaf_table.leaf_idx[np.asarray(sel)])
+            prog = programs.forest_predict_program(
+                sub, self.params, compact=lt is not None,
+                mask_dtype=self.mask_dtype, vote_impl=self.vote_impl,
+                parties=alive)
+            args = (trees,) if lt is None else (trees, None, lt)
+            runner = sub.aot_compile(prog, *args)
+            cached = (runner, trees, lt, int(sel.size))
+            self._degraded[alive] = cached
+        runner, trees, lt, n_trees = cached
+        out = runner(*((trees, xbt) if lt is None else (trees, xbt, lt)))
+        self._wave_info = {"degraded": True, "dead_parties": list(dead),
+                           "n_trees": n_trees}
+        return np.asarray(out)[0]     # 1-D: _strip's reduced-output shape
 
     # ------------------------------------------------------------ hooks
     def _program(self):
@@ -532,7 +613,7 @@ class BoostingServer(ModelServer):
     def __init__(self, trees: list, base: float, params, *,
                  buckets: tuple[int, ...] = DEFAULT_BUCKETS,
                  compact: bool = True, mask_dtype=jnp.uint8, mesh=None,
-                 partition=None, leaf_pad_multiple: int = 8,
+                 substrate=None, partition=None, leaf_pad_multiple: int = 8,
                  max_inflight: int = 1,
                  n_features_per_party: int | None = None):
         self.params = params                     # BoostParams
@@ -540,8 +621,8 @@ class BoostingServer(ModelServer):
         self.mask_dtype = mask_dtype
         self._leaf_pad = leaf_pad_multiple
         self._init_engine(
-            buckets=buckets, mesh=mesh, partition=partition, decode=None,
-            max_inflight=max_inflight,
+            buckets=buckets, mesh=mesh, substrate=substrate,
+            partition=partition, decode=None, max_inflight=max_inflight,
             n_features_per_party=n_features_per_party)
         self._rebind(trees, base)
 
@@ -603,11 +684,11 @@ class LinearServer(ModelServer):
     AOT compile-once, the in-flight ring) identical to the tree engines."""
 
     def __init__(self, model, *, buckets: tuple[int, ...] = DEFAULT_BUCKETS,
-                 mesh=None, max_inflight: int = 1):
+                 mesh=None, substrate=None, max_inflight: int = 1):
         self.model = model                       # fitted FederatedLinear
         self.task = model.task
         self._init_engine(
-            buckets=buckets, mesh=mesh,
+            buckets=buckets, mesh=mesh, substrate=substrate,
             partition=getattr(model, "_partition", None), decode=None,
             max_inflight=max_inflight)
         self._rebind(model)
@@ -647,9 +728,20 @@ class LinearServer(ModelServer):
         return self.model._standardized(self.model._blocks(x_raw))
 
     def serve_parties(self, blocks, *, salt=None):
-        raise NotImplementedError(
-            "party-block serving is tree-family only for now (the F-LR "
-            "request path standardizes raw blocks, not binned ones)")
+        """Serve per-party raw request blocks keyed by (hashed) sample IDs.
+
+        Same re-alignment path as the tree engines (name matching, hashed-ID
+        intersection, fit-time column order) — but the aligned rows stay raw
+        and are standardized with the fit-time moments instead of binned.
+        Returns ``(ids, predictions)`` in the canonical aligned order."""
+        from repro.core import crypto
+        if self.partition is None:
+            raise ValueError("party-block serving needs the fit-time "
+                             "VerticalPartition bound to the server (fit "
+                             "the F-LR model on a VerticalPartition)")
+        ids, raw_parts = self.partition.raw_party_rows(
+            blocks, salt=salt if salt is not None else crypto.DEFAULT_SALT)
+        return ids, self.serve_binned(self.model._standardized(raw_parts))
 
     def _bound_fp(self) -> int | None:
         return int(self.w.shape[-1])             # fit-time padded width

@@ -336,6 +336,52 @@ def test_serve_parties_realigns_out_of_order_and_superset():
     np.testing.assert_array_equal(q.drain()[rid], preds)
 
 
+def test_linear_serve_parties_roundtrip():
+    """LinearServer.serve_parties: the F-LR engine accepts raw per-party
+    request blocks through the same re-alignment path as the tree engines —
+    aligned rows stay raw and are standardized with the fit-time moments."""
+    from repro.core import LinearParams
+    from repro.serving import LinearServer, ServeConfig
+    x, y = make_classification(240, 8, 2, seed=11)
+    blocks, xa, ya = make_party_views(x, y, 3, overlap=0.85, seed=11)
+    fed = Federation(parties=3, n_bins=8)
+    part = fed.ingest(blocks)
+    model = fed.fit(LinearParams(steps=150))
+    server = fed.serve(model, ServeConfig(buckets=(64,)))
+    assert isinstance(server, LinearServer)
+
+    xt, _ = make_classification(30, 8, 2, seed=78)
+    qids = np.array([f"q{i}" for i in range(len(xt))])
+    rng = np.random.default_rng(4)
+    req = []
+    for i, name in enumerate(part.party_names):
+        gid = part.feat_gid[i][part.feat_gid[i] >= 0]
+        rows = rng.permutation(len(xt))
+        extra = rng.normal(size=(3, len(gid)))
+        req.append(PartyBlock(
+            name=name, x=np.concatenate([xt[rows][:, gid], extra]),
+            ids=np.concatenate([qids[rows],
+                                [f"{name}-only{j}" for j in range(3)]])))
+    ids, preds = server.serve_parties(req[::-1])    # any party order
+    order = np.argsort(crypto.hash_ids(qids))
+    np.testing.assert_array_equal(ids, qids[order])
+    np.testing.assert_array_equal(preds, model.predict(xt[order]))
+
+
+def test_hash_ids_cache_bit_identity():
+    """The serving-path hash cache is invisible: cold and warm lookups
+    produce identical digests, and repeated IDs hit the cache."""
+    crypto._HASH_CACHE.clear()
+    ids = np.array([f"u{i}" for i in range(50)])
+    cold = crypto.hash_ids(ids)
+    assert len(crypto._HASH_CACHE) >= 50
+    warm = crypto.hash_ids(np.concatenate([ids, ids]))
+    np.testing.assert_array_equal(warm[:50], cold)
+    np.testing.assert_array_equal(warm[50:], cold)
+    # a different salt is a different preimage, never a stale cache hit
+    assert not np.array_equal(crypto.hash_ids(ids, salt="other"), cold)
+
+
 def test_serve_parties_validates_block_names():
     x, y = make_classification(200, 8, 2, seed=12)
     blocks, _, _ = make_party_views(x, y, 2, overlap=0.9, seed=12)

@@ -1,0 +1,149 @@
+"""Substrate-conformance suite: every registered substrate, one contract.
+
+Parameterized over the ``SUBSTRATES`` registry, so a newly registered
+substrate is pulled into the suite automatically (and fails loudly until
+this file's fixture knows how to build it).  The contract under test:
+
+  * the toy two-collective protocol (``toy_affine``: all_gather + psum +
+    axis_index) is BIT-IDENTICAL to the vmap simulation at the same party
+    count — the same oracle the forest fit/predict programs rely on;
+  * the lifecycle seams behave: ``compile`` returns an executable with
+    unchanged semantics, ``context`` is re-enterable, ``exchange`` is the
+    transport seam (None in-process, a real round trip distributed),
+    ``shutdown`` is idempotent;
+  * ``resolve_substrate`` validates party counts and rejects unknown names
+    with the registry listing;
+  * ``register_substrate`` round-trips a new factory through resolution.
+"""
+import contextlib
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.federation import distributed
+from repro.federation.substrate import (SUBSTRATES, SimulatedSubstrate,
+                                        register_substrate, resolve_substrate)
+
+# party count each substrate runs the toy collective at (sharded is bound
+# by the host's device count: 1 on the CPU test rig)
+PARTY_COUNTS = {"simulated": 3, "sharded": 1, "distributed": 2}
+
+
+@pytest.fixture(scope="module")
+def pool():
+    subs = {
+        "simulated": resolve_substrate("simulated"),
+        "sharded": resolve_substrate(
+            "sharded", Mesh(np.array(jax.devices()[:1]), ("parties",))),
+        "distributed": resolve_substrate(
+            "distributed", parties=PARTY_COUNTS["distributed"]),
+    }
+    missing = set(SUBSTRATES) - set(subs)
+    assert not missing, (
+        f"substrates {sorted(missing)} are registered but the conformance "
+        f"fixture does not build them — add them to this suite")
+    yield subs
+    subs["distributed"].shutdown()
+
+
+def _toy(sub, m: int) -> np.ndarray:
+    x = np.arange(m * 4, dtype=np.int32).reshape(m, 4)
+    prog = sub.program(distributed.toy_affine_fn, 1, 1,
+                       distributed=distributed.toy_affine_spec())
+    with sub.context():
+        out = sub.compile(prog)(x, np.int32(3))
+    return np.asarray(out)
+
+
+def test_registry_is_fully_covered():
+    assert set(PARTY_COUNTS) == set(SUBSTRATES)
+
+
+@pytest.mark.parametrize("name", sorted(PARTY_COUNTS))
+def test_toy_collective_bit_identity(pool, name):
+    """Both collectives + the party index, bit-identical to the simulation
+    at the same party count, on every registered substrate."""
+    m = PARTY_COUNTS[name]
+    got = _toy(pool[name], m)
+    want = _toy(SimulatedSubstrate(), m)
+    assert got.dtype == want.dtype
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("name", sorted(PARTY_COUNTS))
+def test_jit_matches_compile(pool, name):
+    """``jit`` (program + compile in one step) agrees with the two-step
+    path — on the distributed substrate both are the protocol itself."""
+    sub, m = pool[name], PARTY_COUNTS[name]
+    x = np.arange(m * 4, dtype=np.int32).reshape(m, 4)
+    run = sub.jit(distributed.toy_affine_fn, 1, 1,
+                  distributed=distributed.toy_affine_spec())
+    with sub.context():
+        np.testing.assert_array_equal(np.asarray(run(x, np.int32(3))),
+                                      _toy(sub, m))
+
+
+@pytest.mark.parametrize("name", sorted(PARTY_COUNTS))
+def test_context_is_reenterable(pool, name):
+    for _ in range(2):
+        with pool[name].context():
+            pass
+
+
+@pytest.mark.parametrize("name", sorted(PARTY_COUNTS))
+def test_exchange_seam(pool, name):
+    """In-process substrates have no transport: exchange is None.  The
+    distributed substrate answers a real ping round trip."""
+    r = pool[name].exchange("ping", party=0)
+    if name == "distributed":
+        assert r["op"] == "pong" and r["party"] == 0
+    else:
+        assert r is None
+
+
+def test_shutdown_idempotent(pool):
+    for name in ("simulated", "sharded"):
+        pool[name].shutdown()
+        pool[name].shutdown()        # in-process: nothing to tear down, twice
+    from repro.federation.distributed import DistributedSubstrate
+    cold = DistributedSubstrate(2)   # never started: no workers to reap
+    cold.shutdown()
+    cold.shutdown()
+
+
+def test_resolve_validates_party_count(pool):
+    with pytest.raises(ValueError, match="executes"):
+        resolve_substrate(pool["sharded"], parties=3)
+    with pytest.raises(ValueError, match="executes"):
+        resolve_substrate(pool["distributed"], parties=5)
+    # the simulation runs any party count: no n_parties to contradict
+    assert resolve_substrate(pool["simulated"], parties=7) is pool["simulated"]
+
+
+def test_resolve_unknown_name_lists_registry():
+    with pytest.raises(ValueError, match="registered"):
+        resolve_substrate("carrier-pigeon")
+    with pytest.raises(ValueError, match="registered"):
+        resolve_substrate(42)
+
+
+def test_register_substrate_roundtrip():
+    """A decorated factory resolves by name and receives the factory
+    options; unregistering restores the registry."""
+    calls = {}
+
+    @register_substrate("test-echo")
+    def _make(mesh=None, parties=None, **opts):
+        calls.update(opts, parties=parties)
+        return SimulatedSubstrate()
+
+    try:
+        sub = resolve_substrate("test-echo", parties=4, flavor="x")
+        assert isinstance(sub, SimulatedSubstrate)
+        assert calls == {"parties": 4, "flavor": "x"}
+    finally:
+        del SUBSTRATES["test-echo"]
+    with pytest.raises(ValueError, match="registered"):
+        resolve_substrate("test-echo")
