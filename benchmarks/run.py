@@ -16,7 +16,7 @@ def main() -> None:
     t0 = time.time()
     from benchmarks import (binning_ablation, comm_complexity, fig3_domains,
                             fig456_prediction, frontier_bench, kernel_bench,
-                            serving_bench, table1_parity)
+                            serving_bench, sharded_bench, table1_parity)
 
     if os.environ.get("REPRO_BENCH_FAST"):
         table1_parity.BENCH_SETS = ["ionosphere", "spambase", "waveform",
@@ -28,9 +28,12 @@ def main() -> None:
     binning_ablation.run()
     kernel_bench.run()
     frontier_bench.run()
-    # async/autotune section runs in CI's dedicated `--mode async` step
-    # (and locally via `python -m benchmarks.serving_bench --mode async`)
+    # async/autotune and fleet sections run in CI's dedicated `--mode async`
+    # / `--mode fleet` steps (and locally via `python -m
+    # benchmarks.serving_bench --mode async|fleet`)
     serving_bench.run("sync")
+    # real (trees x parties) mesh execution in a forced-device subprocess
+    sharded_bench.run()
     print(f"# total_bench_wall_s={time.time() - t0:.1f}", file=sys.stderr)
 
 

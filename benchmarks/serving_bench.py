@@ -17,9 +17,18 @@ speedup, and repeats with a traffic-autotuned bucket set, asserting the
 compile-once contract (compile_count == len(buckets) after warmup, no
 growth under traffic) in both modes.
 
+The fleet section drives the same mixed-size traffic through a single-cell
+baseline and a 4-cell ServingFleet (consistent-hash routing, per-cell queues
+draining concurrently), asserts request-level bit-identity, reports the
+rows/s ratio, and then forces overload against a throttled fleet to exercise
+both typed shed paths (rate_limit + queue_depth) and the FleetMetrics
+percentile/shed counters.  The >=2x fleet speedup claim is asserted only on
+hosts with >= 4 cores — cells drain on threads, so a single-core box can
+observe routing/bulkhead correctness but not parallel speedup.
+
 REPRO_BENCH_FAST=1 drops to one depth and fewer/smaller waves (the CI smoke
-configuration).  ``python -m benchmarks.serving_bench --mode async`` runs
-just the async/autotune section (the CI smoke step).
+configuration).  ``python -m benchmarks.serving_bench --mode async`` (or
+``--mode fleet``) runs just that section (the CI smoke steps).
 """
 from __future__ import annotations
 
@@ -31,10 +40,12 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core import ForestParams, fit_federated_forest
 from repro.data import make_classification
-from repro.serving import ForestServer, RequestQueue, autotune_buckets
+from repro.serving import (FleetOverloadError, ForestServer, RequestQueue,
+                           ServingFleet, autotune_buckets)
 
 PARTIES = 3
 ASYNC_INFLIGHT = 3
+FLEET_CELLS = 4
 
 
 def _servers(depth: int, n_train: int, buckets):
@@ -172,6 +183,107 @@ def _bench_async(fast: bool) -> list[dict]:
              "compile_count_autotuned": tuned.compile_count}]
 
 
+def _drive_fleet(fleet: ServingFleet, x, sizes) -> tuple[dict, float]:
+    """One mixed-size traffic round through the fleet front door; returns
+    ({rid: preds}, rows/s over the drain)."""
+    rng = np.random.default_rng(7)          # same rows as _drive_queue
+    rids = [fleet.submit(x[rng.integers(0, len(x), size=int(s))],
+                         key=f"req-{i}")
+            for i, s in enumerate(sizes)]
+    t0 = time.perf_counter()
+    results = fleet.drain()
+    dt = time.perf_counter() - t0
+    return ({r: results[r] for r in rids},
+            int(np.sum(sizes)) / max(dt, 1e-12))
+
+
+def _bench_fleet(fast: bool) -> list[dict]:
+    """Single cell vs 4-cell fleet on mixed small-request traffic, then a
+    forced-overload pass exercising both typed shed paths + FleetMetrics
+    (the CI `--mode fleet` smoke)."""
+    buckets = (32, 256)
+    n_req = 32 if fast else 96
+    p = ForestParams(n_estimators=4, max_depth=6, n_bins=16, seed=0)
+    x, y = make_classification(1200 if fast else 4000, 24, 2, seed=8)
+    ff = fit_federated_forest(x, y, PARTIES, p)
+    rng = np.random.default_rng(3)
+    sizes = rng.integers(1, 100, size=n_req)
+
+    single = ForestServer.from_forest(ff, buckets=buckets,
+                                      max_inflight=ASYNC_INFLIGHT).warmup()
+    fleet = ServingFleet(
+        [ForestServer.from_forest(ff, buckets=buckets,
+                                  max_inflight=ASYNC_INFLIGHT)
+         for _ in range(FLEET_CELLS)]).warmup()
+    _drive_queue(single, x, sizes)                     # dispatch-setup warm
+    _drive_fleet(fleet, x, sizes)
+    rounds = 2 if fast else 5
+    rows_s_single = rows_s_fleet = 0.0
+    for _ in range(rounds):                            # interleaved best-of-N
+        res_1, r = _drive_queue(single, x, sizes)
+        rows_s_single = max(rows_s_single, r)
+        res_f, r = _drive_fleet(fleet, x, sizes)
+        rows_s_fleet = max(rows_s_fleet, r)
+    # request-level bit-identity: routing may scatter requests across cells,
+    # but every request's rows come back identical to the single server's
+    for (r1, v1), (rf, vf) in zip(sorted(res_1.items()),
+                                  sorted(res_f.items())):
+        np.testing.assert_array_equal(v1, vf)
+    for name, cell in fleet.cells.items():
+        assert cell.server.compile_count == len(cell.server.buckets), \
+            f"cell {name} recompiled under traffic"
+    ratio = rows_s_fleet / max(rows_s_single, 1e-12)
+    cores = os.cpu_count() or 1
+    if cores >= 4 and not fast:
+        assert ratio >= 2.0, \
+            f"fleet at {FLEET_CELLS} cells only {ratio:.2f}x a single cell"
+    m = fleet.metrics()
+    assert m.rows > 0 and m.p99_ms >= m.p95_ms >= m.p50_ms > 0.0
+    emit("serving/fleet_mixed", np.sum(sizes) / max(rows_s_fleet, 1e-12),
+         f"rows_s_single={rows_s_single:.0f}|rows_s_fleet={rows_s_fleet:.0f}|"
+         f"ratio={ratio:.2f}x|cells={FLEET_CELLS}|cores={cores}|"
+         f"p50_ms={m.p50_ms:.2f}|p99_ms={m.p99_ms:.2f}")
+
+    # forced overload, both typed shed paths.  (1) a starved token bucket:
+    # after the initial burst drains, everything sheds at the front door
+    servers = [cell.server for cell in fleet.cells.values()]
+    limited = ServingFleet({f"r{i}": s for i, s in enumerate(servers)},
+                           rate_limit_rows_per_s=1.0,
+                           rate_burst=float(np.sum(sizes[:4]) + 1))
+    shed = {"rate_limit": 0, "queue_depth": 0}
+    for i, s in enumerate(sizes):
+        try:
+            limited.submit(x[:int(s)], key=f"ovl-{i}")
+        except FleetOverloadError as err:
+            assert err.reason == "rate_limit"
+            shed["rate_limit"] += 1
+    limited.drain()                     # serve what was admitted
+    # (2) tiny bulkheads, no rate limit: one 60-row request fills a 64-row
+    # cell queue, so every cell sheds from its second request on
+    bulk = ServingFleet({f"q{i}": s for i, s in enumerate(servers)},
+                        max_queue_rows=64)
+    for i in range(10 * FLEET_CELLS):
+        try:
+            bulk.submit(x[:60], key=f"jam-{i}")
+        except FleetOverloadError as err:
+            assert err.reason == "queue_depth" and err.cell
+            shed["queue_depth"] += 1
+    bulk.drain()
+    assert shed["rate_limit"] > 0 and shed["queue_depth"] > 0, shed
+    lm, bm = limited.metrics(), bulk.metrics()
+    assert lm.shed["rate_limit"] == shed["rate_limit"]
+    assert bm.shed["queue_depth"] == shed["queue_depth"]
+    emit("serving/fleet_overload", 0.0,
+         f"shed_rate_limit={shed['rate_limit']}|"
+         f"shed_queue_depth={shed['queue_depth']}|"
+         f"accepted={lm.accepted + bm.accepted}|"
+         f"dead_letters={lm.dead_letters + bm.dead_letters}")
+    return [{"mode": "fleet", "cells": FLEET_CELLS, "cores": cores,
+             "rows_s_single": rows_s_single, "rows_s_fleet": rows_s_fleet,
+             "ratio": ratio, "shed": shed,
+             "p50_ms": m.p50_ms, "p95_ms": m.p95_ms, "p99_ms": m.p99_ms}]
+
+
 def run(mode: str = "all") -> list[dict]:
     fast = bool(os.environ.get("REPRO_BENCH_FAST"))
     out = []
@@ -180,12 +292,14 @@ def run(mode: str = "all") -> list[dict]:
             out.extend(_bench_depth(d, fast))
     if mode in ("all", "async"):
         out.extend(_bench_async(fast))
+    if mode in ("all", "fleet"):
+        out.extend(_bench_fleet(fast))
     return out
 
 
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("all", "sync", "async"),
+    ap.add_argument("--mode", choices=("all", "sync", "async", "fleet"),
                     default="all")
     run(ap.parse_args().mode)

@@ -63,6 +63,9 @@ class FederatedForest:
     # ------------------------------------------------------------------ fit
     def fit(self, partition: VerticalPartition, y: np.ndarray) -> "FederatedForest":
         from repro.federation import programs
+        # "auto" build knobs resolve against the actual training set — the
+        # concrete values land back on self.params so refits/serving see them
+        self.params = self.params.resolved(partition.n_samples)
         p = self.params
         if partition.xb.shape[2] == 0:
             raise ValueError("empty feature space")
@@ -159,6 +162,7 @@ class FederatedForest:
         and produces the IDENTICAL forest (master randomness is derived from
         the seed, not from progress)."""
         from repro import ckpt
+        self.params = self.params.resolved(partition.n_samples)
         p = self.params
         y = np.asarray(y)
         if self.encrypt_labels and p.task == "classification":

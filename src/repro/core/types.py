@@ -43,16 +43,17 @@ class ForestParams:
     # LIVE node count requires (a while_loop — compute scales with actual
     # sparsity, not worst-case width).  Results are scattered back to heap
     # order, so the built PartyTree is bit-identical to the dense build.
-    # 0 disables compaction (the dense seed behavior).
-    frontier_cap: int = 256
+    # 0 disables compaction (the dense seed behavior); "auto" derives the
+    # cap from (N, depth, n_bins) at fit time — see ``resolved``.
+    frontier_cap: int | str = 256
     # Histogram backend: a key of kernels.ops.BACKENDS, or "auto" (scatter on
     # CPU/GPU hosts, the compiled Pallas kernel on TPU).
     hist_impl: str = "auto"
     # Bagging batching: how many trees build together under one vmap (the
     # outer lax.map then runs over tree *chunks*).  1 reproduces the seed's
     # pure lax.map; larger values trade HLO size/peak memory for better
-    # hardware utilization on wide hosts.
-    trees_per_batch: int = 1
+    # hardware utilization on wide hosts.  "auto" derives it at fit time.
+    trees_per_batch: int | str = 1
 
     def __post_init__(self) -> None:
         if not (1 <= self.n_bins <= 256):
@@ -63,10 +64,46 @@ class ForestParams:
             raise ValueError(f"unknown task {self.task!r}")
         if not (0.0 < self.max_features <= 1.0):
             raise ValueError("max_features must be in (0, 1]")
-        if self.frontier_cap < 0:
+        if isinstance(self.frontier_cap, str):
+            if self.frontier_cap != "auto":
+                raise ValueError(f"frontier_cap must be an int >= 0 or "
+                                 f"'auto', got {self.frontier_cap!r}")
+        elif self.frontier_cap < 0:
             raise ValueError("frontier_cap must be >= 0 (0 = dense build)")
-        if self.trees_per_batch < 1:
+        if isinstance(self.trees_per_batch, str):
+            if self.trees_per_batch != "auto":
+                raise ValueError(f"trees_per_batch must be an int >= 1 or "
+                                 f"'auto', got {self.trees_per_batch!r}")
+        elif self.trees_per_batch < 1:
             raise ValueError("trees_per_batch must be >= 1")
+
+    # ---- "auto" build-knob resolution ----------------------------------------
+    @property
+    def needs_resolution(self) -> bool:
+        """True while a build knob is still the "auto" placeholder — the
+        params cannot parameterize a fit program until ``resolved``."""
+        return (isinstance(self.frontier_cap, str)
+                or isinstance(self.trees_per_batch, str))
+
+    def resolved(self, n_samples: int) -> "ForestParams":
+        """Replace "auto" build knobs with concrete values derived from the
+        training-set size and the static shape knobs (N, depth, n_bins).
+
+        Both knobs are perf-only: frontier compaction scatters results back
+        to heap order and tree batching only regroups the bagging vmap, so
+        ANY resolution builds a forest bit-identical to any explicit
+        setting (asserted in tests).  Explicit integer settings pass
+        through untouched — the override escape hatch."""
+        if not self.needs_resolution:
+            return self
+        changes: dict = {}
+        if isinstance(self.frontier_cap, str):
+            changes["frontier_cap"] = auto_frontier_cap(
+                n_samples, self.max_depth, self.n_bins, self.n_stat_channels)
+        if isinstance(self.trees_per_batch, str):
+            changes["trees_per_batch"] = auto_trees_per_batch(
+                n_samples, self.n_estimators, self.n_bins)
+        return dataclasses.replace(self, **changes)
 
     # ---- derived static sizes -------------------------------------------------
     @property
@@ -96,3 +133,28 @@ class ForestParams:
     def level_slice(self, depth: int) -> tuple[int, int]:
         """(offset, width) of the nodes at ``depth`` in heap layout."""
         return 2**depth - 1, 2**depth
+
+
+def auto_frontier_cap(n_samples: int, max_depth: int, n_bins: int,
+                      n_stat_channels: int) -> int:
+    """Heuristic frontier cap: the widest compact level whose per-feature
+    histogram slab (cap * n_bins * channels f32) stays within a ~4 MiB
+    working set, clamped to what the tree can actually populate
+    (min(2^depth, N) live nodes) and floored at 64 slots so shallow/fat
+    configurations don't thrash the multi-pass while_loop.  Rounded to a
+    multiple of 64 for tidy lane alignment.  Perf-only: any cap builds the
+    same forest bit-for-bit."""
+    budget = (1 << 22) // max(1, n_bins * n_stat_channels * 4)
+    budget = max(64, (budget // 64) * 64)
+    return int(min(2 ** max_depth, max(64, n_samples), budget))
+
+
+def auto_trees_per_batch(n_samples: int, n_estimators: int,
+                         n_bins: int) -> int:
+    """Heuristic bagging batch: stack trees under one vmap while the
+    per-batch row working set (~N * n_bins lanes per tree) stays within a
+    ~4 MiB budget, capped at 8 (HLO size grows with the batch) and at the
+    forest size.  Perf-only: batching regroups the lax.map without touching
+    per-tree randomness, so outputs are bit-identical at any setting."""
+    per_tree = max(1, n_samples * n_bins)
+    return int(max(1, min(n_estimators, 8, (1 << 22) // per_tree)))

@@ -42,6 +42,11 @@ def forest_fit_program(substrate, params: ForestParams,
     ``tree_sharded=False`` keeps the per-tree args/outputs replicated across
     a mesh's "trees" axis — for callers whose tree count doesn't divide it
     (boosting fits one tree per round)."""
+    if params.needs_resolution:
+        raise ValueError(
+            "frontier_cap/trees_per_batch='auto' resolve at fit time from "
+            "the training set; pass params.resolved(n_samples) to build a "
+            "program directly")
     fit_fn = tree.fit_spmd(params, hist_impl)
     if substrate.mesh is None:
         from repro.federation import distributed

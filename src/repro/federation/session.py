@@ -318,6 +318,66 @@ class Federation:
             self._servers[key] = (model, server, cls.model_token(model))
         return server
 
+    def serve_fleet(self, model: Estimator, config=None, *,
+                    n_cells: int = 4, traffic=None, server_cls=None,
+                    **fleet_kw):
+        """Stand up a :class:`repro.serving.ServingFleet` for ``model``:
+        ``n_cells`` replicated serving engines (each built exactly as
+        ``serve`` would build one — same substrate, same ServeConfig
+        semantics) behind consistent-hash routing and admission control
+        (serving/fleet.py).  Extra keywords (``max_queue_rows``,
+        ``rate_limit_rows_per_s``, ``max_poison_retries``,
+        ``snapshot_hook``, ...) pass through to the fleet front door.
+
+        Cache/refresh semantics match ``serve``: repeated calls with an
+        equal (model, config, n_cells) return the same fleet — every cell's
+        compiled bucket executables are reused — unless the model's state
+        changed, in which case each cell refreshes in place.  With
+        ``config.autotune_buckets`` a cached fleet re-derives buckets PER
+        CELL from that cell's own observed traffic (its ``wave_stats``), so
+        cells serving different row-size mixes tune independently; buckets
+        that survive a retune keep their executables (compile-once per
+        autotune epoch, per cell).  Only the knob-free path is cached, as
+        with ``serve``."""
+        from repro.serving import autotune, engine
+        from repro.serving.config import ServeConfig
+        from repro.serving.fleet import ServingFleet
+        if int(n_cells) < 1:
+            raise ValueError(f"n_cells must be >= 1, got {n_cells}")
+        config = config if config is not None else ServeConfig()
+        cls = server_cls or engine.server_for(model)
+        cacheable = not fleet_kw
+        key = (id(model), config, cls, ("fleet", int(n_cells)))
+        cached = self._servers.get(key) if cacheable else None
+        if cached is not None and cached[0] is model:
+            fleet, token = cached[1], cached[2]
+            if not _token_matches(token, cls.model_token(model)):
+                for cell in fleet.cells.values():
+                    cell.server.refresh_from(model)
+                self._servers[key] = (model, fleet, cls.model_token(model))
+            if config.autotune_buckets:
+                for cell in fleet.cells.values():
+                    tuned = autotune.autotune_buckets(
+                        cell.server.wave_stats, warm=cell.server.buckets)
+                    if tuned != cell.server.buckets:
+                        cell.server.set_buckets(tuned)
+            return fleet
+        warm = config.resolved_buckets(engine.DEFAULT_BUCKETS)
+        if config.autotune_buckets and traffic is not None:
+            warm = autotune.autotune_buckets(traffic, warm=warm)
+        server_kw: dict = {"substrate": self.substrate}
+        if issubclass(cls, engine.ForestServer):
+            server_kw["allow_degraded"] = config.allow_degraded
+        servers = {
+            f"cell{i}": cls.from_model(
+                model, buckets=warm, compact=config.compact,
+                max_inflight=config.max_inflight, **server_kw)
+            for i in range(int(n_cells))}
+        fleet = ServingFleet(servers, **fleet_kw)
+        if cacheable:
+            self._servers[key] = (model, fleet, cls.model_token(model))
+        return fleet
+
     # ------------------------------------------------------------ checkpoint
     def save(self, model: Estimator, ckpt_dir: str,
              step: int | None = None) -> str:

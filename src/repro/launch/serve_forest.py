@@ -158,7 +158,7 @@ def main() -> None:
             print(f"autotune: buckets {buckets} -> {server.buckets} "
                   f"(compiles now {server.compile_count})")
     s = server.stats_summary()
-    if s:
+    if s["waves"]:
         print(f"summary: waves={s['waves']} p50={s['p50_ms']:.2f}ms "
               f"p95={s['p95_ms']:.2f}ms rows/s={s['rows_per_s']:.0f} "
               f"psum_bytes_total={s['comm_bytes_total']} "

@@ -28,16 +28,29 @@ servable system, in three pieces:
     one launch; a huge one spans several), pumped two-phase through the
     async ring, like launch/serve.py's slot-based batching for the
     transformer decode path.
+  * ``fleet``  — ServingFleet: N replicated server cells behind one front
+    door — consistent-hash routing, token-bucket admission, per-cell
+    bulkheads with typed shedding, poison quarantine + dead-letter sink,
+    and cell kill/health-fail → keyspace redistribution with zero lost
+    accepted requests.
+  * ``metrics``— per-cell wave stats rolled up into FleetMetrics (pooled
+    percentiles, busy-interval throughput, shed/dead-letter/degraded
+    counters) with alert thresholds and a periodic snapshot hook.
 
-Entry points: ``Federation.serve`` (the session API — pre-binds the mesh and
-keeps the LeafTable plan fresh across model updates),
-``launch/serve_forest.py`` (CLI traffic driver) and
-``benchmarks/serving_bench.py`` (dense vs leaf-compacted rows/s, p50/p95).
+Entry points: ``Federation.serve`` / ``Federation.serve_fleet`` (the session
+API — pre-binds the mesh and keeps the LeafTable plan fresh across model
+updates), ``launch/serve_forest.py`` + ``launch/fleet_demo.py`` (CLI traffic
+drivers) and ``benchmarks/serving_bench.py`` (dense vs leaf-compacted and
+fleet-vs-single-cell rows/s, p50/p95/p99).
 """
 from repro.serving.autotune import autotune_buckets, observed_row_counts  # noqa: F401
 from repro.serving.config import ServeConfig  # noqa: F401
 from repro.serving.engine import (BoostingServer, ForestServer,  # noqa: F401
                                   InFlightWave, LinearServer, ModelServer,
                                   load_forest_trees, server_for)
+from repro.serving.fleet import (DeadLetter, FleetOverloadError,  # noqa: F401
+                                 HashRing, ServingFleet, TokenBucket)
+from repro.serving.metrics import (AlertThresholds, CellStats,  # noqa: F401
+                                   FleetMetrics, alerts)
 from repro.serving.plan import LeafTable, build_leaf_table  # noqa: F401
-from repro.serving.queue import RequestQueue  # noqa: F401
+from repro.serving.queue import PoisonedWaveError, RequestQueue  # noqa: F401

@@ -390,13 +390,17 @@ class ModelServer:
 
     # ------------------------------------------------------------ reporting
     def stats_summary(self) -> dict:
-        """p50/p95 latency + aggregate throughput over recorded waves.
+        """p50/p95/p99 latency + aggregate throughput over recorded waves.
 
         ``comm_bytes_total`` sums every recorded wave's psum payload, so it
         stays honest under mixed-bucket traffic (per-wave values live in
-        ``wave_stats``)."""
+        ``wave_stats``).  With no recorded waves the record is well-formed
+        zeros (same keys, zero counts/latencies) — a just-spawned or fully
+        drained cell aggregates into fleet metrics without special casing."""
         if not self.wave_stats:
-            return {}
+            return {"waves": 0, "rows": 0, "p50_ms": 0.0, "p95_ms": 0.0,
+                    "p99_ms": 0.0, "rows_per_s": 0.0, "comm_bytes_total": 0,
+                    "compile_count": self.compile_count}
         lat = np.array([w["latency_s"] for w in self.wave_stats])
         rows = sum(w["n_rows"] for w in self.wave_stats)
         # busy time = union of the [t0, t0+latency] wave intervals: async
@@ -413,10 +417,14 @@ class ModelServer:
         return {"waves": len(lat), "rows": rows,
                 "p50_ms": float(np.percentile(lat, 50) * 1e3),
                 "p95_ms": float(np.percentile(lat, 95) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3),
                 "rows_per_s": rows / max(busy, 1e-12),
                 "comm_bytes_total": sum(w["comm_bytes"]
                                         for w in self.wave_stats),
                 "compile_count": self.compile_count}
+
+    #: canonical name; ``stats_summary`` predates it and is kept as an alias.
+    stats = stats_summary
 
 
 class ForestServer(ModelServer):

@@ -1,0 +1,398 @@
+"""Serving-fleet tests: routing, admission, fault tolerance, observability.
+
+The load-bearing acceptance claims:
+
+  * **Bit-identity oracle** — whatever the consistent-hash routing decides,
+    every request served through the fleet is bit-identical to a single
+    ModelServer serving the same rows (cells are replicas of one compiled
+    engine; routing must be invisible in the outputs).
+  * **Zero lost accepted requests** — killing 1 of 4 cells with traffic
+    pending re-routes its keyspace to the survivors; every accepted request
+    resolves or dead-letters, never drops silently.
+
+Plus the satellites riding along: RequestQueue multi-producer thread
+safety, per-cell bucket autotune without recompiling surviving buckets,
+"auto" build-knob resolution bit-identity, and the well-formed zero stats
+record for just-spawned cells.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import ForestParams, crypto, fit_federated_forest
+from repro.data import make_classification, make_party_views
+from repro.federation import Federation
+from repro.serving import (AlertThresholds, FleetOverloadError, ForestServer,
+                           PoisonedWaveError, RequestQueue, ServeConfig,
+                           ServingFleet, alerts)
+from repro.serving.fleet import HashRing, TokenBucket
+from repro.serving.metrics import busy_seconds
+
+
+@pytest.fixture(scope="module")
+def fleet_env():
+    """One fitted forest + a 4-cell fleet + the single-server oracle."""
+    x, y = make_classification(600, 18, 3, seed=0)
+    fed = Federation(parties=3, n_bins=16)
+    fed.ingest(x[:450], y[:450])
+    model = fed.fit(ForestParams(n_classes=3, n_estimators=4, max_depth=6,
+                                 n_bins=16, seed=1))
+    cfg = ServeConfig(buckets=(32, 128))
+    fleet = fed.serve_fleet(model, cfg, n_cells=4).warmup()
+    single = fed.serve(model, cfg)
+    return fed, model, cfg, fleet, single, x[450:]
+
+
+# ----------------------------------------------------------- hash ring
+def test_hash_ring_stability_under_remove():
+    """Consistent hashing's defining property: removing a cell re-routes
+    ONLY the keys that routed to it — everyone else's routing is stable."""
+    ring = HashRing(vnodes=64)
+    for n in ("a", "b", "c", "d"):
+        ring.add(n)
+    keys = [f"k{i}" for i in range(3000)]
+    before = {k: ring.route(k) for k in keys}
+    ring.remove("c")
+    moved = [k for k in keys if ring.route(k) != before[k]]
+    assert moved and all(before[k] == "c" for k in moved)
+    # and the displaced share is roughly 1/4, not the whole keyspace
+    assert 0.10 < len(moved) / len(keys) < 0.45
+
+
+def test_hash_ring_add_steals_only_adjacent_keyspace():
+    ring = HashRing(vnodes=64)
+    for n in ("a", "b", "c"):
+        ring.add(n)
+    keys = [f"s{i}" for i in range(3000)]
+    before = {k: ring.route(k) for k in keys}
+    ring.add("d")
+    moved = [k for k in keys if ring.route(k) != before[k]]
+    assert moved and all(ring.route(k) == "d" for k in moved)
+
+
+def test_hash_ring_spreads_keys():
+    ring = HashRing(vnodes=64)
+    for n in ("a", "b", "c", "d"):
+        ring.add(n)
+    counts: dict = {}
+    for i in range(4000):
+        counts[ring.route(f"x{i}")] = counts.get(ring.route(f"x{i}"), 0) + 1
+    assert set(counts) == {"a", "b", "c", "d"}
+    assert min(counts.values()) > 200       # no starved cell
+
+
+# --------------------------------------------------------- token bucket
+def test_token_bucket_refills_on_injected_clock():
+    t = [0.0]
+    tb = TokenBucket(rate=100.0, capacity=100.0, clock=lambda: t[0])
+    assert tb.try_acquire(100) and not tb.try_acquire(1)
+    t[0] = 0.25
+    assert tb.try_acquire(25) and not tb.try_acquire(1)
+    t[0] = 10.0                              # refill clamps at capacity
+    assert tb.try_acquire(100) and not tb.try_acquire(1)
+
+
+# ------------------------------------------------- bit-identity oracle
+def test_fleet_bit_identity_oracle(fleet_env):
+    """For any routing outcome, fleet predictions == the single server's,
+    over mixed request sizes spanning both buckets and coalesced waves."""
+    _, _, _, fleet, single, xt = fleet_env
+    rng = np.random.default_rng(0)
+    rids = {}
+    for i in range(16):
+        chunk = xt[rng.integers(0, len(xt), size=int(rng.integers(1, 90)))]
+        rids[fleet.submit(chunk, key=f"oracle-{i}")] = chunk
+    out = fleet.drain()
+    assert set(out) == set(rids)
+    for rid, chunk in rids.items():
+        np.testing.assert_array_equal(out[rid], single.serve(chunk))
+    # traffic actually spread: more than one cell served rows
+    served = [c for c in fleet.cells.values()
+              if c.server.stats()["rows"] > 0]
+    assert len(served) > 1
+
+
+def test_fleet_serve_parties_through_front_door():
+    """Party-block requests ride the same admission path: aligned on hashed
+    IDs, admitted as binned rows, bit-identical to the direct server."""
+    x, y = make_classification(260, 9, 2, seed=10)
+    blocks, _, _ = make_party_views(x, y, 3, overlap=0.85, seed=10)
+    fed = Federation(parties=3, n_bins=16)
+    part = fed.ingest(blocks)
+    model = fed.fit(ForestParams(n_estimators=3, max_depth=4, n_bins=16,
+                                 seed=1))
+    cfg = ServeConfig(buckets=(64,))
+    fleet = fed.serve_fleet(model, cfg, n_cells=2)
+    single = fed.serve(model, cfg)
+    xt, _ = make_classification(30, 9, 2, seed=77)
+    qids = np.array([f"q{i}" for i in range(len(xt))])
+    from repro.core.partyblock import PartyBlock
+    req = []
+    for i, name in enumerate(part.party_names):
+        gid = part.feat_gid[i][part.feat_gid[i] >= 0]
+        req.append(PartyBlock(name=name, x=xt[:, gid], ids=qids))
+    rid, ids = fleet.submit_parties(req, key="pb-1")
+    want_ids, want = single.serve_parties(req)
+    np.testing.assert_array_equal(ids, want_ids)
+    np.testing.assert_array_equal(fleet.drain()[rid], want)
+
+
+# --------------------------------------------- cell kill / zero loss
+def test_kill_cell_mid_traffic_loses_nothing(fleet_env):
+    """Killing 1 of 4 cells with requests pending: its keyspace
+    redistributes and every accepted request resolves bit-identically —
+    re-routed, never dropped."""
+    _, _, _, fleet, single, xt = fleet_env
+    rng = np.random.default_rng(1)
+    before = fleet.accepted_count
+    rids = {}
+    for i in range(20):
+        chunk = xt[rng.integers(0, len(xt), size=int(rng.integers(1, 60)))]
+        rids[fleet.submit(chunk, key=f"kill-{i}")] = chunk
+    accepted = fleet.accepted_count - before
+    assert accepted == len(rids)
+    # kill the cell holding the most pending requests — the worst case
+    victim = max(fleet.cells_up(),
+                 key=lambda n: fleet.cells[n].queue.pending_requests())
+    pending = fleet.cells[victim].queue.pending_requests()
+    assert pending > 0
+    moved = fleet.kill_cell(victim)
+    assert moved == pending
+    out = fleet.drain()
+    dead = {d.rid for d in fleet.dead_letters}
+    assert set(out) | dead == set(rids) and not dead
+    for rid, chunk in rids.items():
+        np.testing.assert_array_equal(out[rid], single.serve(chunk))
+    m = fleet.metrics()
+    assert m.cells_down >= 1 and m.rerouted >= moved
+    assert alerts(m, AlertThresholds(cells_down=1))
+    # routing no longer targets the dead cell
+    for i in range(50):
+        assert fleet.ring.route(f"post-{i}") != victim
+
+
+def test_kill_last_cell_refused():
+    x, y = make_classification(200, 8, 2, seed=3)
+    ff = fit_federated_forest(x, y, 2, ForestParams(
+        n_estimators=2, max_depth=4, n_bins=16, seed=0))
+    fleet = ServingFleet([ForestServer.from_forest(ff, buckets=(32,))])
+    with pytest.raises(RuntimeError, match="last cell"):
+        fleet.kill_cell("cell0")
+
+
+def test_health_fail_drains_cell(fleet_env):
+    """A cell whose substrate health check reports a dead party it cannot
+    serve around (allow_degraded off) is drained via the kill path."""
+    _, model, _, _, single, xt = fleet_env
+    # cells on their OWN substrates (serve_fleet shares the session's one;
+    # per-cell health needs per-cell substrates — the distributed case)
+    servers = [ForestServer.from_forest(model, buckets=(64,)).warmup()
+               for _ in range(2)]
+    fleet = ServingFleet({"a": servers[0], "b": servers[1]})
+    rid = fleet.submit(xt[:40], key="health-1")
+    victim = fleet.cells[fleet.ring.route("health-1")]
+    # fault seam: this cell's substrate now reports party 0 dead
+    victim.server.substrate.health = lambda: {0: None, 1: 0.01, 2: 0.01}
+    health = fleet.check_health()
+    assert health[victim.name] is False
+    assert victim.state == "down" and victim.name not in fleet.ring
+    out = fleet.drain()
+    np.testing.assert_array_equal(out[rid], single.serve(xt[:40]))
+
+
+# ----------------------------------------------------- admission control
+def test_rate_limit_sheds_typed(fleet_env):
+    fed, model, cfg, fleet, _, xt = fleet_env
+    t = [0.0]
+    servers = [c.server for c in fleet.cells.values()][:2]
+    limited = ServingFleet({f"r{i}": s for i, s in enumerate(servers)},
+                           rate_limit_rows_per_s=100.0, rate_burst=100.0,
+                           clock=lambda: t[0])
+    limited.submit(xt[:100], key="a")
+    with pytest.raises(FleetOverloadError) as ei:
+        limited.submit(xt[:5], key="b")
+    assert ei.value.reason == "rate_limit"
+    assert limited.shed_counts["rate_limit"] == 1
+    t[0] = 1.0                               # bucket refills with the clock
+    limited.submit(xt[:5], key="b")
+    assert len(limited.drain()) == 2
+
+
+def test_queue_depth_sheds_typed_per_cell(fleet_env):
+    fed, model, cfg, fleet, _, xt = fleet_env
+    servers = [c.server for c in fleet.cells.values()][:2]
+    bulk = ServingFleet({f"q{i}": s for i, s in enumerate(servers)},
+                        max_queue_rows=64)
+    shed = 0
+    for i in range(20):
+        try:
+            bulk.submit(xt[:60], key=f"jam-{i}")
+        except FleetOverloadError as err:
+            assert err.reason == "queue_depth"
+            assert err.cell in bulk.cells    # names the full bulkhead
+            shed += 1
+    assert shed > 0 and bulk.shed_counts["queue_depth"] == shed
+    assert bulk.metrics().shed_total == shed
+    bulk.drain()                             # admitted requests still serve
+
+
+# ------------------------------------------------ poison + dead letters
+def test_poison_request_dead_letters_others_survive(fleet_env):
+    """A request that fails binning poisons its wave; the fleet quarantines
+    it, retries solo, and dead-letters it — innocent requests coalesced into
+    the same wave still serve, bit-identically."""
+    _, _, _, fleet, single, xt = fleet_env
+    good = {}
+    for i in range(6):
+        chunk = xt[i * 8:(i + 1) * 8]
+        good[fleet.submit(chunk, key=f"good-{i}")] = chunk
+    bad_rows = np.zeros((5, xt.shape[1] + 3))        # wrong feature count:
+    bad = fleet.submit(bad_rows, key="poison-1")     # bins fail in the pump
+    out = fleet.drain()
+    assert set(out) == set(good)
+    for rid, chunk in good.items():
+        np.testing.assert_array_equal(out[rid], single.serve(chunk))
+    letters = [d for d in fleet.dead_letters if d.rid == bad]
+    assert len(letters) == 1
+    d = letters[0]
+    assert d.key == "poison-1" and d.x.shape == bad_rows.shape
+    assert isinstance(d.error, PoisonedWaveError)
+    assert d.poisons == fleet.max_poison_retries + 1
+    assert fleet.metrics().dead_letters >= 1
+
+
+# ------------------------------------- RequestQueue multi-producer safety
+def test_request_queue_concurrent_submit_is_atomic(fleet_env):
+    """Satellite regression: submits racing from many threads must not
+    interleave partially — unique rids, every request enqueued exactly
+    once, and a subsequent drain serves each one correctly."""
+    _, _, _, _, single, xt = fleet_env
+    queue = RequestQueue(single)
+    n_threads, per_thread = 8, 25
+    rid_lists = [[] for _ in range(n_threads)]
+    chunks: dict = {}
+    barrier = threading.Barrier(n_threads)
+
+    def producer(t):
+        barrier.wait()                       # maximal contention
+        for j in range(per_thread):
+            chunk = xt[(t * per_thread + j) % 100:][:3 + (j % 5)]
+            rid = queue.submit(chunk)
+            rid_lists[t].append(rid)
+            chunks[rid] = chunk              # dict write: GIL-atomic per key
+
+    threads = [threading.Thread(target=producer, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    rids = [r for lst in rid_lists for r in lst]
+    assert len(rids) == len(set(rids)) == n_threads * per_thread
+    assert queue.pending_requests() == len(rids)
+    assert queue.pending_rows() == sum(len(c) for c in chunks.values())
+    out = queue.drain()
+    assert set(out) == set(rids)
+    for rid in rids:
+        np.testing.assert_array_equal(out[rid], single.serve(chunks[rid]))
+
+
+# ------------------------------------------- per-cell bucket autotune
+def test_fleet_autotune_per_cell_no_recompile_of_survivors(fleet_env):
+    """autotune_buckets=True on a cached fleet re-derives buckets PER CELL
+    from that cell's own traffic; surviving buckets keep their executables
+    (per-cell compile counter grows only by genuinely new buckets)."""
+    fed, model, _, _, single, xt = fleet_env
+    cfg = ServeConfig(buckets=(32, 128), autotune_buckets=True)
+    fleet = fed.serve_fleet(model, cfg, n_cells=2).warmup()
+    # skewed per-cell traffic: tiny requests to one cell, big to the other;
+    # drain per request so each cell's wave_stats reflect ITS row sizes
+    # (one drain over a full queue would coalesce the skew away)
+    names = fleet.cells_up()
+    small_cell, big_cell = names[0], names[1]
+    seen = {small_cell: 0, big_cell: 0}
+    for i in range(200):
+        key = f"t-{i}"
+        target = fleet.ring.route(key)
+        size = 4 if target == small_cell else 120
+        fleet.submit(xt[:size], key=key)
+        fleet.drain()
+        seen[target] += 1
+        if min(seen.values()) >= 12:         # both cells past min_observations
+            break
+    pre = {n: (tuple(c.server.buckets), c.server.compile_count)
+           for n, c in fleet.cells.items()}
+    retuned = fed.serve_fleet(model, cfg, n_cells=2)
+    assert retuned is fleet                  # cache hit, tuned in place
+    for n, cell in fleet.cells.items():
+        warm_buckets, warm_compiles = pre[n]
+        cell.server.warmup()                 # compile any new buckets now
+        survivors = set(warm_buckets) & set(cell.server.buckets)
+        new = set(cell.server.buckets) - set(warm_buckets)
+        # compile-once per epoch: only genuinely new buckets compile
+        assert cell.server.compile_count == warm_compiles + len(new), \
+            f"cell {n} recompiled surviving buckets {survivors}"
+    # the two cells saw different traffic -> tuned independently
+    tuned = {n: tuple(c.server.buckets) for n, c in fleet.cells.items()}
+    assert tuned[small_cell] != tuned[big_cell]
+    # and the retuned fleet still serves bit-identically
+    rid = fleet.submit(xt[:50], key="after-tune")
+    np.testing.assert_array_equal(fleet.drain()[rid], single.serve(xt[:50]))
+
+
+# ------------------------------------------------- zero stats record
+def test_fresh_server_stats_zero_record(fleet_env):
+    """ModelServer.stats() on a never-served engine is a well-formed zero
+    record, so fleet aggregation needs no special casing."""
+    fed, model, cfg, _, _, _ = fleet_env
+    fleet = fed.serve_fleet(model, cfg, n_cells=2, max_queue_rows=1024)
+    for cell in fleet.cells.values():
+        s = cell.server.stats()
+        assert s["waves"] == s["rows"] == 0
+        assert s["p50_ms"] == s["p95_ms"] == s["p99_ms"] == 0.0
+        assert s["rows_per_s"] == 0.0 and s["comm_bytes_total"] == 0
+    m = fleet.metrics()                      # just-spawned fleet aggregates
+    assert m.rows == 0 and m.rows_per_s == 0.0 and m.p99_ms == 0.0
+    assert m.cells_up == 2 and not alerts(m, AlertThresholds(cells_down=1))
+
+
+def test_busy_seconds_unions_overlaps():
+    assert busy_seconds([(0.0, 1.0), (0.5, 2.0), (3.0, 4.0)]) == 3.0
+    assert busy_seconds([]) == 0.0
+
+
+# ------------------------------------------- "auto" build-knob resolution
+def test_auto_build_params_bit_identical():
+    """frontier_cap='auto' / trees_per_batch='auto' resolve at fit time and
+    build the same forest bit-for-bit as explicit settings (the knobs are
+    perf-only); explicit ints pass through untouched."""
+    import jax
+    x, y = make_classification(300, 12, 2, seed=0)
+    base = dict(n_estimators=4, max_depth=6, n_bins=16, seed=1)
+    p_auto = ForestParams(frontier_cap="auto", trees_per_batch="auto",
+                          **base)
+    assert p_auto.needs_resolution
+    ff_auto = fit_federated_forest(x, y, 3, p_auto)
+    assert not ff_auto.params.needs_resolution
+    assert isinstance(ff_auto.params.frontier_cap, int)
+    ff_dense = fit_federated_forest(x, y, 3, ForestParams(
+        frontier_cap=0, trees_per_batch=1, **base))
+    for a, b in zip(jax.tree.leaves(ff_auto.trees_),
+                    jax.tree.leaves(ff_dense.trees_)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # override escape hatch: explicit values never touched
+    p_expl = ForestParams(frontier_cap=96, trees_per_batch=2, **base)
+    assert p_expl.resolved(300) is p_expl
+    with pytest.raises(ValueError, match="auto"):
+        ForestParams(frontier_cap="adaptive", **base)
+    with pytest.raises(ValueError, match="auto"):
+        ForestParams(trees_per_batch="max", **base)
+
+
+def test_auto_params_rejected_by_program_builder():
+    from repro.federation import programs
+    from repro.federation.substrate import default_substrate
+    p = ForestParams(frontier_cap="auto", n_bins=16)
+    with pytest.raises(ValueError, match="resolved"):
+        programs.forest_fit_program(default_substrate(None), p)
