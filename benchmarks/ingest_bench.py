@@ -1,0 +1,93 @@
+"""Streaming vs in-memory ingest: wall time, peak RSS (tracemalloc), and
+sketch accuracy across chunk sizes and sketch capacities.
+
+Quantifies the tentpole trade-off of the out-of-core data plane: the
+chunked path re-reads CSV bytes twice (scan pass + bin pass) in exchange
+for never holding a silo's raw features densely.  Rows report
+
+  * ``ingest/inmem``          — whole-file ``from_csv`` + dense build;
+  * ``ingest/stream-exact``   — chunked, ``capacity >= n`` (bit-identical
+    partition, asserted);
+  * ``ingest/stream-cap*``    — chunked with bounded sketches: peak memory
+    down, tracked rank-error bound and binned-value agreement reported.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import tracemalloc
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.partyblock import PartyBlock
+from repro.core.party import partition_from_blocks
+from repro.data import make_classification
+from repro.streaming import ChunkedCSVSource, streaming_ingest
+
+M = 3
+
+
+def _silo_csvs(n, f_per_silo, seed, outdir):
+    x, y = make_classification(n, f_per_silo * M, 2, n_informative=10,
+                               seed=seed)
+    ids = np.array([f"c{i:07d}" for i in range(n)])
+    rng, paths = np.random.default_rng(seed), []
+    for i in range(M):
+        cols = np.arange(i * f_per_silo, (i + 1) * f_per_silo)
+        order = rng.permutation(n)
+        b = PartyBlock(name=f"silo{i}", x=x[order][:, cols], ids=ids[order],
+                       y=y[order] if i == 0 else None, feature_ids=cols)
+        paths.append(b.to_csv(os.path.join(outdir, f"{b.name}.csv")))
+    return paths
+
+
+def _peak(fn):
+    tracemalloc.start()
+    out = fn()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return out, peak
+
+
+def run() -> None:
+    fast = bool(os.environ.get("REPRO_BENCH_FAST"))
+    n, f_per_silo, n_bins = (4000, 32, 16) if fast else (20000, 64, 16)
+    chunk = 500
+    with tempfile.TemporaryDirectory() as d:
+        paths = _silo_csvs(n, f_per_silo, seed=0, outdir=d)
+
+        def inmem():
+            return partition_from_blocks(
+                [PartyBlock.from_csv(p) for p in paths], n_bins=n_bins)
+
+        (ref, _, _), peak_ref = _peak(inmem)
+        emit("ingest/inmem", timeit(inmem, repeat=1),
+             f"n={n}|peak_mb={peak_ref / 1e6:.1f}")
+
+        def stream(capacity):
+            return streaming_ingest([ChunkedCSVSource(p) for p in paths],
+                                    n_bins, chunk_rows=chunk,
+                                    capacity=capacity)
+
+        (part, _, _, streams), peak_ex = _peak(lambda: stream(n))
+        assert np.array_equal(part.xb, ref.xb) \
+            and np.array_equal(part.boundaries, ref.boundaries), \
+            "exact streamed ingest must be bit-identical to the dense build"
+        emit("ingest/stream-exact", timeit(lambda: stream(n), repeat=1),
+             f"chunk={chunk}|peak_mb={peak_ex / 1e6:.1f}|bit_identical=1")
+
+        for cap in (512,) if fast else (512, 2048):
+            (part_c, _, _, streams), peak_c = _peak(lambda: stream(cap))
+            err = max(s.merged_scan().sketches.err for s in streams)
+            agree = float((part_c.xb == ref.xb).mean())
+            emit(f"ingest/stream-cap{cap}",
+                 timeit(lambda: stream(cap), repeat=1),
+                 f"chunk={chunk}|peak_mb={peak_c / 1e6:.1f}"
+                 f"|rank_err={err}|xb_agree={agree:.4f}")
+            assert err <= 0.02 * n, \
+                f"tracked rank error {err} above 2% of {n} rows"
+
+
+if __name__ == "__main__":
+    run()

@@ -15,8 +15,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     from benchmarks import (binning_ablation, comm_complexity, fig3_domains,
-                            fig456_prediction, frontier_bench, kernel_bench,
-                            serving_bench, sharded_bench, table1_parity)
+                            fig456_prediction, frontier_bench, ingest_bench,
+                            kernel_bench, serving_bench, sharded_bench,
+                            table1_parity)
 
     if os.environ.get("REPRO_BENCH_FAST"):
         table1_parity.BENCH_SETS = ["ionosphere", "spambase", "waveform",
@@ -26,6 +27,7 @@ def main() -> None:
     fig456_prediction.run()
     comm_complexity.run()
     binning_ablation.run()
+    ingest_bench.run()
     kernel_bench.run()
     frontier_bench.run()
     # async/autotune and fleet sections run in CI's dedicated `--mode async`

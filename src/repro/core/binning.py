@@ -14,6 +14,17 @@ from __future__ import annotations
 import numpy as np
 
 
+def interior_quantiles(n_bins: int) -> np.ndarray:
+    """The n_bins - 1 interior quantile levels a bin grid is cut at.
+
+    Single owner of the grid definition: the in-memory path
+    (:func:`quantile_boundaries`) and the streaming quantile sketch
+    (repro.streaming.sketch) both cut at exactly these levels, which is what
+    makes an uncompacted sketch's edges bit-identical to the dense build.
+    """
+    return np.linspace(0.0, 1.0, n_bins + 1)[1:-1]
+
+
 def quantile_boundaries(x: np.ndarray, n_bins: int) -> np.ndarray:
     """Per-feature upper-boundary grid, shape (F, n_bins - 1).
 
@@ -24,7 +35,7 @@ def quantile_boundaries(x: np.ndarray, n_bins: int) -> np.ndarray:
     x = np.asarray(x, dtype=np.float64)
     if x.ndim != 2:
         raise ValueError("expected (n_samples, n_features)")
-    qs = np.linspace(0.0, 1.0, n_bins + 1)[1:-1]  # interior quantiles
+    qs = interior_quantiles(n_bins)
     return np.quantile(x, qs, axis=0).T.astype(np.float64)  # (F, n_bins-1)
 
 

@@ -97,6 +97,54 @@ def align_ids(*hashed_parties: np.ndarray,
     return tuple(out)
 
 
+def align_hashed(hashes, names, *, check_unique: bool = True,
+                 identity_fast_path: bool = True):
+    """Align M parties' already-hashed ID arrays with the loud-error contract.
+
+    The shared back half of every ingest path (distributed workers,
+    streaming sources): validates per-party uniqueness with the party *name*
+    attached, takes the pre-aligned identity fast path when all arrays are
+    equal (preserving the caller's row order bit-for-bit), and otherwise
+    runs :func:`align_ids` onto the canonical sorted-hash common ordering —
+    rewording the empty-intersection error with the party names.
+
+    Callers that decide the fast path on *raw* IDs themselves (the local
+    streaming plane, mirroring align_party_blocks exactly) pass
+    ``identity_fast_path=False`` so equal hashes of unequal raw IDs cannot
+    skip the canonical reordering.
+
+    Returns ``(positions, common_hashed)``: one int64 position array per
+    party and the common hashed IDs in the aligned order.
+    """
+    hs = [np.asarray(h).reshape(-1) for h in hashes]
+    if check_unique:
+        for h, name in zip(hs, names):
+            if np.unique(h).size != h.size:
+                raise ValueError(
+                    f"party {name!r} has duplicate sample IDs: alignment "
+                    f"would be ambiguous — deduplicate before ingest")
+    first = hs[0]
+    if identity_fast_path and all(h.shape == first.shape
+                                  and np.array_equal(h, first)
+                                  for h in hs[1:]):
+        if first.size == 0:     # the fast path must keep the loud-error
+            raise ValueError(   # contract, not fall through to binning
+                f"empty hashed-ID intersection across parties "
+                f"{list(names)}: no shared samples to align")
+        pos = np.arange(len(first), dtype=np.int64)
+        return [pos.copy() for _ in hs], first.copy()
+    try:
+        positions = list(align_ids(*hs, check_unique=False))
+    except ValueError as e:
+        if "intersection" not in str(e):
+            raise
+        raise ValueError(
+            f"empty hashed-ID intersection across parties "
+            f"{list(names)}: no shared samples to align "
+            f"(same ID space and salt on every party?)") from e
+    return positions, hs[0][positions[0]]
+
+
 def encode_labels(y: np.ndarray, n_classes: int, seed: int = 0):
     """Permute class ids: clients train on encoded labels (classification is
     invariant); only the label owner can decode. Returns (y_enc, decode)."""

@@ -90,21 +90,47 @@ class FederatedForest:
         return self
 
     def _master_randomness(self, partition: VerticalPartition):
-        """Paper Alg. 2: master samples rows (bootstrap) + per-tree features."""
+        """Paper Alg. 2: master samples rows (bootstrap) + per-tree features.
+
+        Each tree draws from its own seeded stream
+        (``default_rng([seed, t])``), so tree t's bootstrap and feature
+        subset depend only on (seed, t) — never on how many trees the forest
+        will eventually hold.  That prefix-stability is what makes an
+        incremental continuation exact: extending a fitted T-tree forest to
+        T' trees produces bit-identically the first T trees of a from-scratch
+        T'-tree fit (fit_resumable's tree-extension path relies on it)."""
         p = self.params
-        rng = np.random.default_rng(p.seed)
         n, f = partition.n_samples, partition.n_features
         t = p.n_estimators
-        if p.bootstrap:
-            idx = rng.integers(0, n, size=(t, n))
-            weights = np.stack([np.bincount(i, minlength=n) for i in idx])
-        else:
-            weights = np.ones((t, n))
         k = max(1, int(np.ceil(p.max_features * f)))
+        weights = np.ones((t, n))
         feat_sels = np.zeros((t, f), dtype=bool)
         for i in range(t):
+            rng = np.random.default_rng([p.seed, i])
+            if p.bootstrap:
+                weights[i] = np.bincount(rng.integers(0, n, size=n),
+                                         minlength=n)
             feat_sels[i, rng.choice(f, size=k, replace=False)] = True
         return weights.astype(np.float32), feat_sels
+
+    def _fit_fingerprint(self, partition: VerticalPartition,
+                         y: np.ndarray) -> str:
+        """Content hash of everything a resumable fit depends on EXCEPT the
+        tree count: the binned data, the labels, and the params.  A
+        checkpoint tagged with a different fingerprint must not be resumed —
+        appending rows (ingest_append) changes the partition, and welding
+        old-data trees onto new-data trees would silently produce a
+        franken-forest.  n_estimators is excluded so growing the tree count
+        IS resumable (per-tree randomness makes the prefix exact)."""
+        import hashlib
+        h = hashlib.sha256()
+        for a in (partition.xb, partition.feat_gid, partition.boundaries,
+                  np.asarray(y)):
+            h.update(np.ascontiguousarray(a).tobytes())
+        h.update(repr(dataclasses.replace(
+            self.params, n_estimators=0)).encode())
+        h.update(repr((self.encrypt_labels, self.mask_regression)).encode())
+        return h.hexdigest()
 
     # -------------------------------------------------------------- predict
     def _run_predict(self, x_test: np.ndarray, program, *shared) -> np.ndarray:
@@ -160,7 +186,24 @@ class FederatedForest:
         recovery granularity = tree chunks: each chunk's PartyTree stack is
         checkpointed; a restarted fit resumes after the last complete chunk
         and produces the IDENTICAL forest (master randomness is derived from
-        the seed, not from progress)."""
+        the seed, not from progress).
+
+        Checkpoints carry a fingerprint of (binned data, labels, params sans
+        tree count): a checkpoint from different data or params is ignored
+        and the fit restarts from scratch instead of welding incompatible
+        tree prefixes together.  Two incremental moves are therefore exact:
+
+          * **more trees** — rerun with a larger ``n_estimators``: the
+            checkpointed prefix is reused and only the new trees build
+            (per-tree randomness makes the result bit-identical to a
+            from-scratch fit at the larger count);
+          * **more rows** — after ``Federation.ingest_append`` the partition
+            changed, the fingerprint mismatches, and the refit is cleanly
+            from scratch on the concatenated data.
+
+        A checkpoint AHEAD of ``n_estimators`` (trained further in a prior
+        run) restores and slices its first ``n_estimators`` trees — also
+        exact, for the same reason."""
         from repro import ckpt
         self.params = self.params.resolved(partition.n_samples)
         p = self.params
@@ -171,14 +214,13 @@ class FederatedForest:
             y_enc, self._decode = y, lambda v: np.asarray(v)
         y_stats = impurity.stat_channels(jnp.asarray(y_enc), p.task, p.n_classes)
         weights, feat_sels = self._master_randomness(partition)
+        fingerprint = self._fit_fingerprint(partition, y)
 
         from repro.federation import programs
         run = self._sub().compile(programs.forest_fit_program(self._sub(), p,
                                                               self.hist_impl))
-        chunks: list = []
-        done = ckpt.latest_step(ckpt_dir)
-        start = 0
-        if done is not None:
+
+        def restore(done):
             # PartyTree stack shapes are fully determined by (M, done, params)
             # — no need to trace the fit program (which the distributed
             # substrate could not trace anyway).
@@ -192,7 +234,26 @@ class FederatedForest:
                 split_bin=sds((m, done, nn), jnp.int32),
                 owner=sds((m, done, nn), jnp.int32),
                 split_gid=sds((m, done, nn), jnp.int32))
-            chunks.append(ckpt.restore_checkpoint(ckpt_dir, done, like))
+            return ckpt.restore_checkpoint(ckpt_dir, done, like)
+
+        chunks: list = []
+        done = ckpt.latest_step(ckpt_dir)
+        if done is not None:
+            # legacy pre-fingerprint checkpoints (meta without the key) are
+            # trusted as before; a PRESENT-but-different fingerprint means
+            # the data or params moved under the checkpoint — start over
+            stamp = ckpt.read_meta(ckpt_dir, done).get("fingerprint")
+            if stamp is not None and stamp != fingerprint:
+                done = None
+        start = 0
+        if done is not None and done >= p.n_estimators:
+            full = restore(done)
+            self.trees_ = jax.tree.map(
+                lambda a: a[:, : p.n_estimators], full)
+            self.partition_ = partition
+            return self
+        if done is not None:
+            chunks.append(restore(done))
             start = done
         for lo in range(start, p.n_estimators, trees_per_chunk):
             hi = min(lo + trees_per_chunk, p.n_estimators)
@@ -203,7 +264,9 @@ class FederatedForest:
             chunks.append(part_trees)
             merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
                                   *chunks)
-            ckpt.save_checkpoint(ckpt_dir, hi, merged)
+            ckpt.save_checkpoint(ckpt_dir, hi, merged,
+                                 meta={"family": "forest",
+                                       "fingerprint": fingerprint})
             chunks = [merged]
         self.trees_ = chunks[0]
         self.partition_ = partition

@@ -23,7 +23,8 @@ import dataclasses
 import numpy as np
 
 from repro.core import binning, crypto
-from repro.core.partyblock import PartyBlock, align_party_blocks, resolve_blocks
+from repro.core.partyblock import (PartyBlock, align_party_blocks,
+                                   feature_groups, resolve_blocks)
 
 
 @dataclasses.dataclass
@@ -213,22 +214,8 @@ def partition_from_blocks(blocks, n_bins: int, *,
     blocks = sorted(resolve_blocks(blocks), key=lambda b: b.name)
     common, positions = align_party_blocks(blocks, salt=salt)
 
-    with_ids = [b for b in blocks if b.feature_ids is not None]
-    if with_ids and len(with_ids) != len(blocks):
-        raise ValueError("feature_ids must be set on every party or none")
-    if with_ids:
-        groups = [np.sort(b.feature_ids) for b in blocks]
-        all_ids = np.concatenate(groups) if groups else np.empty(0, np.int64)
-        n_features = int(all_ids.size)
-        if not np.array_equal(np.sort(all_ids), np.arange(n_features)):
-            raise ValueError(
-                f"feature_ids across parties must partition 0..F-1, got "
-                f"{sorted(all_ids.tolist())}")
-    else:
-        offsets = np.cumsum([0] + [b.n_features for b in blocks])
-        groups = [np.arange(offsets[i], offsets[i + 1])
-                  for i in range(len(blocks))]
-        n_features = int(offsets[-1])
+    groups, n_features = feature_groups(
+        [b.feature_ids for b in blocks], [b.n_features for b in blocks])
 
     feat_gid = _pad_groups(groups)
     m, fp = feat_gid.shape

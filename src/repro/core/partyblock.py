@@ -109,39 +109,22 @@ class PartyBlock:
         feature.  ``name`` defaults to the file stem.  Feature headers of
         the form ``gf<N>`` (to_csv's encoding of global feature ids) are
         parsed back into ``feature_ids``, so the to_csv round trip preserves
-        the global column encoding."""
+        the global column encoding.
+
+        Missing or NaN feature cells raise a loud ValueError naming the
+        column and row — binning would otherwise silently sort NaNs into the
+        last bin and corrupt every split on that feature."""
         with open(path, newline="") as fh:
             rows = list(csv.reader(fh, delimiter=delimiter))
         if not rows:
             raise ValueError(f"{path}: empty CSV")
         header, body = rows[0], rows[1:]
-        if id_column not in header:
-            raise ValueError(f"{path}: no {id_column!r} column in header "
-                             f"{header}")
-        id_idx = header.index(id_column)
-        label_idx = header.index(label_column) if label_column in header \
-            else None
-        feat_idx = [j for j in range(len(header))
-                    if j not in (id_idx, label_idx)]
+        id_idx, label_idx, feat_idx, names, feature_ids = csv_layout(
+            header, path, id_column=id_column, label_column=label_column)
         ids = np.array([r[id_idx] for r in body])
-        x = np.array([[float(r[j]) for j in feat_idx] for r in body],
-                     dtype=np.float64).reshape(len(body), len(feat_idx))
-        y = None
-        if label_idx is not None:
-            # lexically-integer labels ("3") are class ids; anything float-
-            # formatted ("3.0") stays float, so to_csv round trips regression
-            # targets that happen to be whole numbers without a dtype change
-            vals = [r[label_idx] for r in body]
-            if vals and all(v.removeprefix("-").removeprefix("+").isdigit()
-                            for v in vals):
-                y = np.array([int(v) for v in vals], dtype=np.int64)
-            else:
-                y = np.array([float(v) for v in vals])
-        names = tuple(header[j] for j in feat_idx)
-        feature_ids = None
-        if names and all(n.startswith("gf") and n[2:].isdigit()
-                         for n in names):
-            feature_ids = np.array([int(n[2:]) for n in names])
+        x = parse_feature_rows(body, feat_idx, header, path)
+        y = parse_labels([r[label_idx] for r in body]) \
+            if label_idx is not None else None
         return cls(name=name or os.path.splitext(os.path.basename(path))[0],
                    x=x, ids=ids, y=y, feature_ids=feature_ids,
                    feature_names=names)
@@ -169,6 +152,90 @@ class PartyBlock:
                     row.append(self.y[i])
                 w.writerow(row)
         return path
+
+
+# -------------------------------------------------------- CSV parse helpers
+# Shared by PartyBlock.from_csv and the streaming ChunkedCSVSource: one owner
+# of the header layout, the float parse (with the loud NaN/missing contract),
+# and the label dtype rule, so a chunked read is bit-identical to from_csv.
+
+def csv_layout(header: list[str], path: str, *, id_column: str = "id",
+               label_column: str = "label"):
+    """Resolve a CSV header into ``(id_idx, label_idx, feat_idx, names,
+    feature_ids)``.  ``label_idx`` is None when no label column is present;
+    ``feature_ids`` is parsed from all-``gf<N>`` headers (to_csv's global-id
+    encoding) or None."""
+    if id_column not in header:
+        raise ValueError(f"{path}: no {id_column!r} column in header "
+                         f"{header}")
+    id_idx = header.index(id_column)
+    label_idx = header.index(label_column) if label_column in header else None
+    feat_idx = [j for j in range(len(header)) if j not in (id_idx, label_idx)]
+    names = tuple(header[j] for j in feat_idx)
+    feature_ids = None
+    if names and all(n.startswith("gf") and n[2:].isdigit() for n in names):
+        feature_ids = np.array([int(n[2:]) for n in names])
+    return id_idx, label_idx, feat_idx, names, feature_ids
+
+
+def parse_feature_rows(body, feat_idx, header, path: str, *,
+                       row_offset: int = 0) -> np.ndarray:
+    """Parse CSV body rows into a float64 feature matrix, raising a loud
+    ValueError naming the column and (global) row index on missing or NaN
+    cells instead of letting NaNs reach binning."""
+    x = np.empty((len(body), len(feat_idx)), dtype=np.float64)
+    for i, r in enumerate(body):
+        for k, j in enumerate(feat_idx):
+            cell = r[j].strip() if j < len(r) else ""
+            v = float(cell) if cell else float("nan")
+            if v != v:  # NaN — explicit "nan" cells and missing cells alike
+                raise ValueError(
+                    f"{path}: missing/NaN value in feature column "
+                    f"{header[j]!r} at data row {row_offset + i} — clean or "
+                    f"impute before ingest (binning would silently bucket "
+                    f"NaNs and corrupt every split on that feature)")
+            x[i, k] = v
+    return x
+
+
+def parse_labels(vals: list[str]) -> np.ndarray:
+    """The label dtype rule: lexically-integer labels ("3") are class ids
+    (int64); anything float-formatted ("3.0") stays float, so to_csv round
+    trips regression targets that happen to be whole numbers without a dtype
+    change."""
+    if vals and all(v.removeprefix("-").removeprefix("+").isdigit()
+                    for v in vals):
+        return np.array([int(v) for v in vals], dtype=np.int64)
+    return np.array([float(v) for v in vals])
+
+
+def feature_groups(feature_ids_per_party, n_features_per_party):
+    """Resolve per-party global feature-id groups — the single owner of the
+    all-or-none feature_ids contract shared by every ingest path (in-memory
+    ``partition_from_blocks``, distributed workers, streaming assembly).
+
+    When every party declares ``feature_ids`` they must partition 0..F-1
+    (ascending within each party); when none do, contiguous ids are assigned
+    in the given (canonical) party order.  Returns ``(groups, n_features)``.
+    """
+    with_ids = [f for f in feature_ids_per_party if f is not None]
+    if with_ids and len(with_ids) != len(feature_ids_per_party):
+        raise ValueError("feature_ids must be set on every party or none")
+    if with_ids:
+        groups = [np.sort(np.asarray(f, dtype=np.int64).reshape(-1))
+                  for f in feature_ids_per_party]
+        all_ids = np.concatenate(groups) if groups else np.empty(0, np.int64)
+        n_features = int(all_ids.size)
+        if not np.array_equal(np.sort(all_ids), np.arange(n_features)):
+            raise ValueError(
+                f"feature_ids across parties must partition 0..F-1, got "
+                f"{sorted(all_ids.tolist())}")
+    else:
+        offsets = np.cumsum([0] + list(n_features_per_party))
+        groups = [np.arange(offsets[i], offsets[i + 1])
+                  for i in range(len(n_features_per_party))]
+        n_features = int(offsets[-1])
+    return groups, n_features
 
 
 @runtime_checkable

@@ -55,7 +55,8 @@ from jax import lax
 
 from repro.core import crypto, impurity, tree
 from repro.core.party import VerticalPartition, _pad_groups
-from repro.core.partyblock import CSVSource, DataSource, PartyBlock
+from repro.core.partyblock import (CSVSource, DataSource, PartyBlock,
+                                   feature_groups)
 from repro.core.tree import PartyTree
 from repro.core.types import PARTY_AXIS, ForestParams
 from repro.federation import transport
@@ -721,45 +722,14 @@ def distributed_ingest(coord: Coordinator, sources, n_bins: int, *,
     hashes = [np.asarray(coord.request(w, {"op": "hash_block_ids",
                                            "salt": salt})["hashes"])
               for w in order]
-    first = hashes[0]
-    if all(h.shape == first.shape and np.array_equal(h, first)
-           for h in hashes[1:]):
-        if first.size == 0:
-            raise ValueError(
-                f"empty hashed-ID intersection across parties "
-                f"{sorted(names)}: no shared samples to align")
-        positions = [np.arange(len(first), dtype=np.int64) for _ in hashes]
-        common = first.copy()
-    else:
-        try:
-            positions = list(crypto.align_ids(*hashes, check_unique=False))
-        except ValueError as e:
-            if "intersection" not in str(e):
-                raise
-            raise ValueError(
-                f"empty hashed-ID intersection across parties "
-                f"{sorted(names)}: no shared samples to align "
-                f"(same ID space and salt on every party?)") from e
-        common = hashes[0][positions[0]]
+    # per-party uniqueness was validated worker-side (hash_block_ids names
+    # the party); align_hashed owns the fast path + loud-error contract
+    positions, common = crypto.align_hashed(
+        hashes, [names[w] for w in order], check_unique=False)
 
-    fids = [metas[w].get("feature_ids") for w in order]
-    with_ids = [f for f in fids if f is not None]
-    if with_ids and len(with_ids) != len(fids):
-        raise ValueError("feature_ids must be set on every party or none")
-    if with_ids:
-        groups = [np.sort(np.asarray(f, np.int64)) for f in fids]
-        all_ids = np.concatenate(groups)
-        n_features = int(all_ids.size)
-        if not np.array_equal(np.sort(all_ids), np.arange(n_features)):
-            raise ValueError(
-                f"feature_ids across parties must partition 0..F-1, got "
-                f"{sorted(all_ids.tolist())}")
-    else:
-        offsets = np.cumsum([0] + [int(metas[w]["n_features"])
-                                   for w in order])
-        groups = [np.arange(offsets[i], offsets[i + 1])
-                  for i in range(len(order))]
-        n_features = int(offsets[-1])
+    groups, n_features = feature_groups(
+        [metas[w].get("feature_ids") for w in order],
+        [int(metas[w]["n_features"]) for w in order])
 
     feat_gid = _pad_groups(groups)
     m, fp = feat_gid.shape
@@ -769,6 +739,135 @@ def distributed_ingest(coord: Coordinator, sources, n_bins: int, *,
     for i, w in enumerate(order):
         r = coord.request(w, {"op": "bin_block", "positions": positions[i],
                               "n_bins": n_bins})
+        xb_i = np.asarray(r["xb"])
+        xb[i, :, : xb_i.shape[1]] = xb_i
+        boundaries[groups[i]] = np.asarray(r["boundaries"])
+        if r.get("y") is not None:
+            if holder is not None:
+                raise ValueError(
+                    f"labels held by more than one party ({holder!r} and "
+                    f"{names[w]!r}); exactly one party owns the labels")
+            holder, y = names[w], np.asarray(r["y"])
+
+    part = VerticalPartition(xb=xb, feat_gid=feat_gid,
+                             n_features=n_features, boundaries=boundaries,
+                             raw_parts=None,
+                             party_names=tuple(names[w] for w in order))
+    return part, y, common
+
+
+# --------------------------------------------------------- streaming ingest
+def _stream_source_spec(src) -> dict:
+    """Wire spec for a chunked source — what ships to a party worker so the
+    worker can stream the data *locally*.  CSVs ship as a path (the file
+    lives with the party; its raw rows never cross the wire); in-memory
+    blocks ship once as arrays (tests / small silos); products ship their
+    schema + version around an inner source spec."""
+    from repro import streaming
+    if isinstance(src, streaming.DataProduct):
+        s = src.schema
+        return {"kind": "product", "name": src.name,
+                "version": int(src.version),
+                "schema": {"n_features": int(s.n_features),
+                           "feature_ids": (list(s.feature_ids)
+                                           if s.feature_ids is not None
+                                           else None),
+                           "feature_dtype": s.feature_dtype,
+                           "id_kind": s.id_kind,
+                           "has_labels": bool(s.has_labels)},
+                "inner": _stream_source_spec(src.source)}
+    if isinstance(src, streaming.ChunkedCSVSource):
+        return {"kind": "csv_chunks", **dataclasses.asdict(src)}
+    if isinstance(src, CSVSource):
+        return {"kind": "csv_chunks", **dataclasses.asdict(src)}
+    if isinstance(src, streaming.ArraySource):
+        return dict(_source_spec(src.block), kind="block_chunks")
+    if isinstance(src, PartyBlock):
+        return dict(_source_spec(src), kind="block_chunks")
+    if isinstance(src, DataSource):
+        raise TypeError(
+            f"cannot ship a {type(src).__name__} to a party worker — "
+            f"distributed streaming takes chunked CSVs (streamed "
+            f"party-side), blocks, or DataProducts over them")
+    raise TypeError(f"expected a chunked source, PartyBlock or CSVSource, "
+                    f"got {type(src).__name__}")
+
+
+def stream_source_from_spec(spec: dict):
+    """Worker-side inverse of :func:`_stream_source_spec`."""
+    from repro import streaming
+    kind = spec["kind"]
+    if kind == "product":
+        s = spec["schema"]
+        return streaming.DataProduct(
+            name=spec["name"], version=int(spec["version"]),
+            source=stream_source_from_spec(spec["inner"]),
+            schema=streaming.ProductSchema(
+                n_features=int(s["n_features"]),
+                feature_ids=(tuple(int(f) for f in s["feature_ids"])
+                             if s["feature_ids"] is not None else None),
+                feature_dtype=s["feature_dtype"], id_kind=s["id_kind"],
+                has_labels=bool(s["has_labels"])))
+    if kind == "csv_chunks":
+        return streaming.ChunkedCSVSource(
+            path=spec["path"], name=spec.get("name"),
+            id_column=spec.get("id_column", "id"),
+            label_column=spec.get("label_column", "label"),
+            delimiter=spec.get("delimiter", ","))
+    if kind == "block_chunks":
+        names = spec.get("feature_names")
+        return streaming.ArraySource(PartyBlock(
+            name=spec["name"], x=spec["x"], ids=spec["ids"],
+            y=spec.get("y"), feature_ids=spec.get("feature_ids"),
+            feature_names=tuple(names) if names else None))
+    raise transport.ProtocolError(f"unknown stream source kind {kind!r}")
+
+
+def distributed_streaming_ingest(coord: Coordinator, sources, n_bins: int, *,
+                                 chunk_rows: int, capacity: int,
+                                 salt: str = crypto.DEFAULT_SALT,
+                                 append: bool = False):
+    """Streamed ingest over the wire: each party worker scans and bins its
+    own chunks process-side (repro.streaming.PartyStream held at the
+    worker); the coordinator sees hashed IDs, sketch-derived boundaries,
+    binned values and the aligned labels — never raw features or raw IDs.
+
+    ``append=True`` extends the streams the workers already hold (one new
+    source per party, worker order matching the original ingest) and
+    re-assembles over the union — the distributed twin of
+    ``Federation.ingest_append``.  Returns ``(partition, y, common_hashed)``
+    exactly like :func:`distributed_ingest`."""
+    sources = list(sources)
+    if len(sources) != coord.n_parties:
+        raise ValueError(f"expected {coord.n_parties} party sources, got "
+                         f"{len(sources)}")
+    metas = [coord.request(w, {"op": "stream_scan",
+                               "source": _stream_source_spec(s),
+                               "chunk_rows": int(chunk_rows),
+                               "capacity": int(capacity), "salt": salt,
+                               "append": bool(append)})
+             for w, s in enumerate(sources)]
+    names = [m["name"] for m in metas]
+    if len(set(names)) != len(names):
+        raise ValueError(f"party names must be unique, got {names}")
+    order = sorted(range(len(names)), key=lambda w: names[w])
+
+    # workers validated per-party ID uniqueness during the scan
+    positions, common = crypto.align_hashed(
+        [np.asarray(metas[w]["hashes"]) for w in order],
+        [names[w] for w in order], check_unique=False)
+    groups, n_features = feature_groups(
+        [metas[w].get("feature_ids") for w in order],
+        [int(metas[w]["n_features"]) for w in order])
+
+    feat_gid = _pad_groups(groups)
+    m, fp = feat_gid.shape
+    xb = np.zeros((m, len(common), fp), dtype=np.uint8)
+    boundaries = np.zeros((n_features, max(n_bins - 1, 0)), dtype=np.float64)
+    y, holder = None, None
+    for i, w in enumerate(order):
+        r = coord.request(w, {"op": "stream_bin", "positions": positions[i],
+                              "n_bins": int(n_bins)})
         xb_i = np.asarray(r["xb"])
         xb[i, :, : xb_i.shape[1]] = xb_i
         boundaries[groups[i]] = np.asarray(r["boundaries"])
@@ -935,6 +1034,18 @@ class DistributedSubstrate:
                       validate: bool = False):
         return distributed_ingest(self.coordinator, sources, n_bins,
                                   salt=salt, validate=validate)
+
+    def ingest_stream(self, sources, n_bins: int, *,
+                      salt: str = crypto.DEFAULT_SALT, validate: bool = False,
+                      chunk_rows: int, capacity: int, append: bool = False):
+        if validate:
+            raise ValueError(
+                "validate=True re-bins the assembled central matrix, which "
+                "the distributed substrate never holds — validate on an "
+                "in-process substrate instead")
+        return distributed_streaming_ingest(
+            self.coordinator, sources, n_bins, chunk_rows=chunk_rows,
+            capacity=capacity, salt=salt, append=append)
 
     def health(self, timeout: float = 2.0):
         return self.coordinator.health(timeout=timeout)

@@ -38,6 +38,7 @@ def worker_main(host: str, port: int, index: int) -> None:
     binds: dict[int, dict] = {}
     chaos: dict | None = None
     block = None
+    stream = None
     while True:
         try:
             msg = ch.recv(None)
@@ -69,6 +70,8 @@ def worker_main(host: str, port: int, index: int) -> None:
             _handle_run(ch, msg, index, binds)
         elif op in ("load_block", "hash_block_ids", "bin_block"):
             block = _handle_ingest(ch, msg, block, index)
+        elif op in ("stream_scan", "stream_bin"):
+            stream = _handle_stream(ch, msg, stream, index)
         # anything else (stale abort/coll_result of a superseded run): skip
 
 
@@ -152,3 +155,55 @@ def _handle_ingest(ch, msg, block, index):
         except transport.TransportError:
             pass
     return block
+
+
+def _handle_stream(ch, msg, stream, index):
+    """The party side of distributed_streaming_ingest; returns the held
+    PartyStream.  The stream (raw chunks scanned from this party's own
+    source, raw IDs, sketches) lives here; only hashed IDs, sketch-derived
+    boundaries, binned values, and the aligned labels go back up the wire."""
+    from repro import streaming
+    from repro.core import crypto
+    from repro.federation.distributed import stream_source_from_spec
+    op, nonce = msg["op"], msg.get("nonce")
+    try:
+        if op == "stream_scan":
+            source = stream_source_from_spec(msg["source"])
+            if msg.get("append"):
+                if stream is None:
+                    raise RuntimeError(
+                        "no stream held (stream_scan without append first)")
+            else:
+                stream = streaming.PartyStream(
+                    chunk_rows=int(msg["chunk_rows"]),
+                    capacity=int(msg["capacity"]),
+                    salt=msg.get("salt", crypto.DEFAULT_SALT))
+            stream.extend(source)
+            merged = stream.merged_scan()
+            if np.unique(merged.ids).size != merged.n_rows:
+                raise ValueError(
+                    f"party {merged.name!r} has duplicate sample IDs: "
+                    f"alignment would be ambiguous — deduplicate before "
+                    f"ingest")
+            ch.send({"op": "stream_meta", "nonce": nonce,
+                     "name": merged.name, "n_rows": merged.n_rows,
+                     "hashes": merged.hashes,
+                     "feature_ids": merged.feature_ids,
+                     "n_features": merged.sketches.n_features,
+                     "has_y": merged.y is not None})
+        else:                                       # stream_bin
+            if stream is None:
+                raise RuntimeError("no stream held (stream_scan first)")
+            pos = np.asarray(msg["positions"], np.int64)
+            xb_i, b_i, y_i = streaming.party_stream_bin(
+                stream, pos, int(msg["n_bins"]))
+            ch.send({"op": "stream_binned", "nonce": nonce, "xb": xb_i,
+                     "boundaries": b_i, "y": y_i})
+    except Exception as e:
+        try:
+            ch.send({"op": "error", "nonce": nonce,
+                     "message": f"{type(e).__name__}: {e}",
+                     "traceback": traceback.format_exc()})
+        except transport.TransportError:
+            pass
+    return stream

@@ -77,6 +77,11 @@ class Federation:
                                            **substrate_opts)
         self._partition: VerticalPartition | None = None
         self._y: np.ndarray | None = None
+        # streaming-ingest state (repro.streaming): the per-party
+        # PartyStreams of a local streamed ingest, or the bookkeeping of a
+        # distributed one (workers hold their own streams process-side) —
+        # what ingest_append extends
+        self._stream: dict | None = None
         # sample IDs of the ingested training set in aligned (row) order —
         # the canonical common ordering for party-block ingest, arange for
         # the pre-aligned raw-matrix path
@@ -96,7 +101,8 @@ class Federation:
     def ingest(self, data, y: np.ndarray | None = None, *,
                n_bins: int | None = None, contiguous: bool = True,
                seed: int | None = None, salt: str = crypto.DEFAULT_SALT,
-               validate: bool = False) -> VerticalPartition:
+               validate: bool = False, chunk_rows: int | None = None,
+               sketch_capacity: int | None = None) -> VerticalPartition:
         """Ingest the session's training set; remembers (partition, y) so
         ``fit(spec)`` needs no further arguments.
 
@@ -119,7 +125,36 @@ class Federation:
         ``y`` — adapted into implicit pre-aligned PartyBlocks split across
         the session's M parties (``contiguous``/``seed`` steer the feature
         assignment exactly as before).
+
+        Streaming shape: hand any party's entry as a chunked source
+        (:mod:`repro.streaming` — ``ChunkedCSVSource``, ``ArraySource``, a
+        ``DataProduct``) and ingest runs out-of-core: every source is
+        scanned chunk-wise (hashed IDs + mergeable quantile sketches),
+        aligned, and binned in a second chunked pass — the raw features are
+        never held densely, and the result is bit-identical to the
+        in-memory build while the sketches stay exact (within their tracked
+        rank-error bound past that).  ``chunk_rows`` bounds the pass
+        working set, ``sketch_capacity`` the sketch memory/accuracy
+        trade-off.  ``ingest_append`` can then land new rows.
         """
+        from repro.streaming import is_chunked_sequence
+        if is_chunked_sequence(data):
+            if y is not None or not contiguous or seed is not None:
+                raise ValueError(
+                    "streamed ingest: labels ride on the label-holding "
+                    "party's chunks, and feature assignment is owned by "
+                    "the sources (feature_ids) — y/contiguous/seed do not "
+                    "apply")
+            if len(data) != self.parties:
+                raise ValueError(f"got {len(data)} party sources but the "
+                                 f"session declares {self.parties} parties")
+            return self._ingest_stream(data, n_bins=n_bins or self.n_bins,
+                                       salt=salt, validate=validate,
+                                       chunk_rows=chunk_rows,
+                                       sketch_capacity=sketch_capacity)
+        if chunk_rows is not None or sketch_capacity is not None:
+            raise ValueError("chunk_rows/sketch_capacity apply to streamed "
+                             "ingest (chunked sources) only")
         if is_block_sequence(data):
             if y is not None:
                 raise ValueError(
@@ -145,6 +180,7 @@ class Federation:
                     data, n_bins or self.n_bins, salt=salt, validate=validate)
             self._partition, self._y = part, y_aligned
             self.aligned_ids_ = ids
+            self._stream = None
             return part
         if isinstance(data, (PartyBlock, DataSource)):
             raise TypeError("pass PartyBlocks as a sequence: "
@@ -156,7 +192,79 @@ class Federation:
         self._partition = part
         self._y = None if y is None else np.asarray(y)
         self.aligned_ids_ = np.arange(part.n_samples)
+        self._stream = None
         return part
+
+    def _ingest_stream(self, sources, *, n_bins: int, salt: str,
+                       validate: bool, chunk_rows: int | None,
+                       sketch_capacity: int | None,
+                       append: bool = False) -> VerticalPartition:
+        from repro import streaming
+        chunk_rows = chunk_rows if chunk_rows is not None \
+            else streaming.DEFAULT_CHUNK_ROWS
+        capacity = sketch_capacity if sketch_capacity is not None \
+            else streaming.DEFAULT_CAPACITY
+        # a transport-backed substrate streams party-side: each worker scans
+        # and bins its own chunks; only hashes, sketch-derived boundaries,
+        # binned values and the aligned labels cross the wire
+        ingest_stream = getattr(self.substrate, "ingest_stream", None)
+        if ingest_stream is not None:
+            part, y, ids = ingest_stream(
+                sources, n_bins, salt=salt, validate=validate,
+                chunk_rows=chunk_rows, capacity=capacity, append=append)
+            self._stream = {"mode": "distributed", "n_bins": n_bins,
+                            "salt": salt, "chunk_rows": chunk_rows,
+                            "capacity": capacity}
+        else:
+            if append:
+                streams = self._stream["streams"]
+                streaming.append_streams(streams, sources)
+                part, y, ids = streaming.assemble_streams(streams, n_bins)
+            else:
+                part, y, ids, streams = streaming.streaming_ingest(
+                    sources, n_bins, chunk_rows=chunk_rows,
+                    capacity=capacity, salt=salt, validate=validate)
+            self._stream = {"mode": "local", "streams": streams,
+                            "n_bins": n_bins, "salt": salt,
+                            "chunk_rows": chunk_rows, "capacity": capacity}
+        self._partition, self._y = part, y
+        self.aligned_ids_ = ids
+        return part
+
+    def ingest_append(self, sources) -> VerticalPartition:
+        """Land newly published party data onto a streamed ingest.
+
+        ``sources`` are chunked sources (or blocks/products) whose chunks
+        name existing parties: each is scanned once and appended to that
+        party's stream — product versions must strictly advance — and the
+        partition is re-assembled over old + new rows (bin edges move when
+        rows land, so every row re-bins; hashing and sketching of already-
+        scanned sources is never repeated).  On a distributed substrate the
+        append ships one source per party to its worker, which extends its
+        process-side stream.
+
+        Rows join the training set once every party holds them: a party
+        whose rows lack counterparts simply stays out of the intersection
+        until the other silos publish matching extracts.
+
+        The re-assembled partition replaces the session training set; a
+        following ``fit``/``fit_resumable`` trains on the concatenated data
+        (bit-identical to a from-scratch ingest of the union), and cached
+        plans/servers refresh exactly as after any refit — plan caches key
+        on the model's tree stack, server caches on (trees, partition), so
+        the next ``predict``/``serve`` against the refitted model rebuilds
+        what staleness invalidated.
+        """
+        if self._stream is None:
+            raise ValueError(
+                "ingest_append extends a streamed ingest: call "
+                "ingest([...chunked sources...]) first (in-memory ingests "
+                "re-ingest the full block set instead)")
+        st = self._stream
+        return self._ingest_stream(
+            sources, n_bins=st["n_bins"], salt=st["salt"], validate=False,
+            chunk_rows=st["chunk_rows"], sketch_capacity=st["capacity"],
+            append=True)
 
     @property
     def labels_(self) -> np.ndarray | None:
@@ -177,14 +285,35 @@ class Federation:
     def fit_resumable(self, spec: ForestParams, ckpt_dir: str, *,
                       trees_per_chunk: int = 2,
                       partition: VerticalPartition | None = None,
-                      y: np.ndarray | None = None, **model_kw) -> Estimator:
+                      y: np.ndarray | None = None,
+                      model: Estimator | None = None,
+                      **model_kw) -> Estimator:
         """Break-point-recoverable forest fit (paper §4.1) through the
-        session substrate; chunk checkpoints land in ``ckpt_dir``."""
+        session substrate; chunk checkpoints land in ``ckpt_dir``.
+
+        The incremental-fit entry point: rerun with a larger
+        ``spec.n_estimators`` to extend a checkpointed forest (only the new
+        trees build — bit-identical to a from-scratch fit at the larger
+        count), or after ``ingest_append`` to retrain on the grown data
+        (the checkpoint fingerprint detects the changed partition and the
+        fit cleanly restarts).  Pass ``model=`` to continue an existing
+        fitted handle in place: cached plans and servers keyed to that
+        handle refresh automatically when its trees/partition change."""
         if not isinstance(spec, ForestParams):
             raise TypeError("fit_resumable is forest-only")
         partition, y = self._training_set(partition, y)
         self._check_binning(spec, partition)
-        model = self._model_for(self._apply_session(spec), **model_kw)
+        if model is not None:
+            from repro.core.forest import FederatedForest
+            if not isinstance(model, FederatedForest):
+                raise TypeError("fit_resumable(model=...) continues a "
+                                "FederatedForest handle")
+            if model_kw:
+                raise ValueError("model= continues an existing handle; "
+                                 "constructor kwargs don't apply")
+            model.params = self._apply_session(spec)
+        else:
+            model = self._model_for(self._apply_session(spec), **model_kw)
         return model.fit_resumable(partition, y, ckpt_dir,
                                    trees_per_chunk=trees_per_chunk)
 

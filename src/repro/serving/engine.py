@@ -511,10 +511,21 @@ class ForestServer(ModelServer):
         """Token of the model state a server was built from — object
         entries compare by identity, value entries by equality
         (session._token_matches); ``Federation.serve`` refreshes the cached
-        server when the token changes."""
-        return (model.trees_,)
+        server when the token changes.  The partition rides in the token
+        because the server bins raw request rows with the fit-time
+        boundaries: after an ``ingest_append`` + refit the boundaries moved,
+        and serving with the stale grid would silently mis-bin every
+        request."""
+        return (model.trees_, model.partition_)
 
     def refresh_from(self, model) -> "ForestServer":
+        """Rebind to a refreshed model: trees AND the request-path state
+        (partition for binning, label decode) — a refit on appended rows
+        changes all three."""
+        if model.partition_ is not None:
+            self.partition = model.partition_
+        if model._decode is not None:
+            self.decode = model._decode
         return self.refresh(model.trees_)
 
     def refresh(self, trees: PartyTree) -> "ForestServer":

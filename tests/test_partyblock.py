@@ -298,6 +298,27 @@ def test_csv_missing_id_column(tmp_path):
         PartyBlock.from_csv(str(f))
 
 
+def test_csv_nan_and_missing_values_raise_loudly(tmp_path):
+    """Satellite: a NaN or empty feature cell fails the parse naming the
+    column and the data row — binning would otherwise silently bucket NaNs
+    and corrupt every split on that feature."""
+    f = tmp_path / "nan.csv"
+    f.write_text("id,age,income\nu1,33,50000\nu2,41,NaN\nu3,29,61000\n")
+    with pytest.raises(ValueError, match=r"'income'.*data row 1"):
+        PartyBlock.from_csv(str(f))
+    f.write_text("id,age,income\nu1,33,50000\nu2,41,1.0\nu3,,61000\n")
+    with pytest.raises(ValueError, match=r"'age'.*data row 2"):
+        PartyBlock.from_csv(str(f))
+    # the chunked reader shares the parse helpers: same contract, and the
+    # row index stays global even when the bad row is deep in a later chunk
+    from repro.streaming import ChunkedCSVSource
+    f.write_text("id,a\n" + "".join(f"u{i},{i}.5\n" for i in range(7))
+                 + "u7,nan\n")
+    with pytest.raises(ValueError, match=r"'a'.*data row 7"):
+        for _ in ChunkedCSVSource(str(f)).iter_chunks(3):
+            pass
+
+
 # ------------------------------------------------------ party-block serving
 def test_serve_parties_realigns_out_of_order_and_superset():
     """ForestServer.serve_parties: request blocks keyed by hashed IDs with

@@ -1,0 +1,344 @@
+"""Streaming out-of-core data plane: chunked sources, mergeable quantile
+sketches, and incremental fit.
+
+The load-bearing claims:
+  * the quantile sketch is EXACT (bit-identical to np.quantile, hence to
+    binning.quantile_boundaries) until it first compacts, and past that its
+    tracked ``err`` is a proven additive rank-error bound — asserted
+    property-style across chunk sizes, chunk orders, and merge orders;
+  * streamed chunked ingest (CSV chunks, block chunks, products; shuffled
+    rows; partial overlap) builds a partition BIT-IDENTICAL to the
+    in-memory ``partition_from_blocks`` on both tasks and both substrates;
+  * ``ingest_append`` + refit equals a from-scratch ingest+fit of the
+    concatenated data, and ``fit_resumable`` extends a checkpointed forest
+    bit-identically to a larger from-scratch fit (per-tree counter-based
+    randomness), restarting cleanly when the fingerprint detects new data;
+  * DataProduct schemas are validated loudly per chunk and product versions
+    must advance across appends.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ForestParams, PartyBlock, partition_from_blocks
+from repro.core.binning import quantile_boundaries
+from repro.data import make_classification, make_party_views, make_regression
+from repro.federation import Federation
+from repro.federation.transport import RetryPolicy
+from repro.streaming import (ArraySource, ChunkedCSVSource, DataProduct,
+                             FeatureSketches, ProductSchema, QuantileSketch)
+
+M = 3
+
+
+def _parts_equal(a, b):
+    np.testing.assert_array_equal(a.xb, b.xb)
+    np.testing.assert_array_equal(a.feat_gid, b.feat_gid)
+    np.testing.assert_array_equal(a.boundaries, b.boundaries)
+    assert a.n_features == b.n_features
+    assert a.party_names == b.party_names
+
+
+def _trees_equal(a, b):
+    import jax
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ------------------------------------------------------------------ sketches
+def test_sketch_exact_regime_bit_identical_to_dense_binning():
+    """Under capacity the sketch never compacts: its edges are literally
+    np.quantile at the grid levels — bit-equal to quantile_boundaries."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(500, 4)) * [1.0, 10.0, 0.1, 100.0]
+    fs = FeatureSketches(4, capacity=512)
+    for lo in range(0, 500, 37):                  # ragged chunks
+        fs.update(x[lo:lo + 37])
+    assert fs.exact and fs.err == 0
+    np.testing.assert_array_equal(fs.edges(16), quantile_boundaries(x, 16))
+    # chunk order cannot matter in the exact regime (buffer is a multiset)
+    fs2 = FeatureSketches(4, capacity=512)
+    for lo in reversed(range(0, 500, 23)):
+        fs2.update(x[lo:lo + 23])
+    np.testing.assert_array_equal(fs.edges(16), fs2.edges(16))
+
+
+def test_sketch_rejects_non_finite():
+    with pytest.raises(ValueError, match="non-finite"):
+        QuantileSketch(capacity=8).update([1.0, np.nan])
+
+
+def _rank_within(data_sorted, value, target_rank, err):
+    """True rank of ``value`` (as an interval, for ties/interpolation) is
+    within ``err`` (+1 for interpolation between adjacent ranks) of
+    ``target_rank``."""
+    lo = np.searchsorted(data_sorted, value, side="left")
+    hi = np.searchsorted(data_sorted, value, side="right")
+    return lo - (err + 1) <= target_rank <= hi + (err + 1)
+
+
+@pytest.mark.parametrize("chunk,seed", [(64, 1), (173, 2), (512, 3)])
+def test_sketch_error_bound_property(chunk, seed):
+    """Property: however the stream is chunked and merged, every bin edge's
+    true rank is within the sketch's *tracked* ``err`` of the grid rank,
+    and ``err`` itself stays near the classic log2(n/k)/k bound."""
+    rng = np.random.default_rng(seed)
+    n, k = 6000, 64
+    data = np.concatenate([rng.normal(size=n // 2),
+                           rng.exponential(size=n // 2) * 40.0])
+    rng.shuffle(data)
+    data_sorted = np.sort(data)
+
+    # one sketch fed sequentially, and a merge tree over per-chunk sketches
+    seq = QuantileSketch(capacity=k)
+    parts = []
+    for lo in range(0, n, chunk):
+        seq.update(data[lo:lo + chunk])
+        parts.append(QuantileSketch(capacity=k).update(data[lo:lo + chunk]))
+    merged = parts[0]
+    for p in parts[1:]:
+        merged = merged.merge(p)
+    # merge-order invariance of the guarantee: reversed merge order too
+    rev = parts[-1]
+    for p in reversed(parts[:-1]):
+        rev = p.merge(rev)
+
+    qs = np.linspace(0.0, 1.0, 17)[1:-1]
+    for sk in (seq, merged, rev):
+        assert sk.n == n
+        assert 0 < sk.err <= 4 * (np.log2(n / k) + 2) * k  # tracked, sane
+        for q, v in zip(qs, sk.quantiles(qs)):
+            assert _rank_within(data_sorted, v, q * (n - 1), sk.err), \
+                f"edge at q={q} outside tracked rank error {sk.err}"
+
+
+def test_sketch_merge_exact_regime_is_order_invariant():
+    rng = np.random.default_rng(7)
+    chunks = [rng.normal(size=s) for s in (40, 11, 96, 3)]
+    sks = [QuantileSketch(capacity=256).update(c) for c in chunks]
+    a = sks[0].merge(sks[1]).merge(sks[2]).merge(sks[3])
+    b = sks[3].merge(sks[2]).merge(sks[1]).merge(sks[0])
+    assert a.exact and b.exact
+    qs = np.linspace(0, 1, 9)[1:-1]
+    np.testing.assert_array_equal(a.quantiles(qs), b.quantiles(qs))
+    np.testing.assert_array_equal(
+        a.quantiles(qs), np.quantile(np.concatenate(chunks), qs))
+
+
+# ------------------------------------------------- streamed ingest (local)
+@pytest.mark.parametrize("task", ["classification", "regression"])
+def test_streamed_ingest_bit_identical_to_in_memory(task, tmp_path):
+    """The losslessness oracle: chunked CSV + block sources, shuffled rows,
+    partial overlap — the streamed build equals partition_from_blocks and
+    the downstream fit is bit-identical."""
+    if task == "classification":
+        x, y = make_classification(260, 9, 3, seed=5)
+    else:
+        x, y = make_regression(260, 9, seed=5)
+    blocks, _, _ = make_party_views(x, y, M, overlap=0.8, seed=5)
+    ref_part, ref_y, ref_ids = partition_from_blocks(blocks, n_bins=16)
+
+    sources = [ChunkedCSVSource(b.to_csv(str(tmp_path / f"{b.name}.csv")),
+                                name=b.name)
+               for b in blocks[:-1]] + [ArraySource(blocks[-1])]
+    fed = Federation(parties=M, n_bins=16)
+    part = fed.ingest(sources, chunk_rows=29)
+    _parts_equal(part, ref_part)
+    np.testing.assert_array_equal(fed._y, ref_y)
+    np.testing.assert_array_equal(fed.aligned_ids_, ref_ids)
+
+    p = ForestParams(task=task, n_estimators=2, max_depth=3, n_bins=16,
+                     n_classes=3, seed=3)
+    ref_fed = Federation(parties=M, n_bins=16)
+    ref_fed.ingest(blocks)
+    _trees_equal(fed.fit(p).trees_, ref_fed.fit(p).trees_)
+
+
+def test_streamed_ingest_chunk_size_invariance(tmp_path):
+    """Chunk size is an execution knob, not a semantic one."""
+    x, y = make_classification(150, 6, 2, seed=11)
+    blocks, _, _ = make_party_views(x, y, M, overlap=0.9, seed=11)
+    ref, ref_y, _ = partition_from_blocks(blocks, n_bins=8)
+    for rows in (1, 7, 64, 4096):
+        fed = Federation(parties=M, n_bins=8)
+        part = fed.ingest([ArraySource(b) for b in blocks], chunk_rows=rows)
+        _parts_equal(part, ref)
+        np.testing.assert_array_equal(fed._y, ref_y)
+
+
+def test_streamed_ingest_knob_errors():
+    x, y = make_classification(60, 6, 2, seed=0)
+    blocks, _, _ = make_party_views(x, y, M, seed=0)
+    fed = Federation(parties=M, n_bins=8)
+    with pytest.raises(ValueError, match="chunked sources"):
+        fed.ingest(blocks, chunk_rows=16)      # block path: knob must bark
+    with pytest.raises(ValueError, match="y/contiguous/seed"):
+        fed.ingest([ArraySource(b) for b in blocks], y=y)
+    with pytest.raises(ValueError, match="declares 3"):
+        fed.ingest([ArraySource(blocks[0])])
+    with pytest.raises(ValueError, match="ingest_append extends"):
+        fed.ingest_append([ArraySource(blocks[0])])
+
+
+# ----------------------------------------------------------- incremental fit
+def test_ingest_append_and_refit_match_from_scratch():
+    """Appended rows re-assemble to exactly the from-scratch union build;
+    a fit after the append is bit-identical to fitting the union."""
+    x, y = make_classification(200, 6, 2, seed=21)
+    blocks, _, _ = make_party_views(x, y, M, overlap=1.0, seed=21)
+    x2, y2 = make_classification(80, 6, 2, seed=22)
+    blocks2, _, _ = make_party_views(x2, y2, M, overlap=1.0, seed=21)
+    blocks2 = [PartyBlock(name=b.name, x=b.x,
+                          ids=np.array([f"new{i}" for i in range(len(b.ids))]),
+                          y=b.y, feature_ids=b.feature_ids)
+               for b in blocks2]
+    union = [PartyBlock(name=a.name, x=np.concatenate([a.x, b.x]),
+                        ids=np.concatenate([a.ids, b.ids]),
+                        y=None if a.y is None else np.concatenate([a.y, b.y]),
+                        feature_ids=a.feature_ids)
+             for a, b in zip(blocks, blocks2)]
+    ref_part, ref_y, ref_ids = partition_from_blocks(union, n_bins=16)
+
+    fed = Federation(parties=M, n_bins=16)
+    fed.ingest([ArraySource(b) for b in blocks], chunk_rows=33)
+    part = fed.ingest_append([ArraySource(b) for b in blocks2])
+    _parts_equal(part, ref_part)
+    np.testing.assert_array_equal(fed._y, ref_y)
+    np.testing.assert_array_equal(fed.aligned_ids_, ref_ids)
+
+    p = ForestParams(n_estimators=3, max_depth=3, n_bins=16, seed=9)
+    ref_fed = Federation(parties=M, n_bins=16)
+    ref_fed.ingest(union)
+    _trees_equal(fed.fit(p).trees_, ref_fed.fit(p).trees_)
+
+
+def test_fit_resumable_extends_bit_identically(tmp_path):
+    """Counter-based per-tree randomness: growing n_estimators on an
+    existing checkpoint builds only the new trees, yet the result equals a
+    from-scratch fit at the larger count."""
+    x, y = make_classification(150, 6, 2, seed=2)
+    fed = Federation(parties=M, n_bins=8)
+    fed.ingest(x, y)
+    small = ForestParams(n_estimators=2, max_depth=3, n_bins=8, seed=4)
+    big = ForestParams(n_estimators=5, max_depth=3, n_bins=8, seed=4)
+    ck = str(tmp_path / "ck")
+    m_small = fed.fit_resumable(small, ck, trees_per_chunk=2)
+    m_big = fed.fit_resumable(big, ck, trees_per_chunk=2, model=m_small)
+    assert m_big is m_small                       # continued in place
+    ref = fed.fit(big)
+    _trees_equal(m_big.trees_, ref.trees_)
+    # prefix stability: the first 2 trees are the small fit's trees
+    import jax
+    _trees_equal(jax.tree.map(lambda a: a[:, :2], ref.trees_),
+                 fed.fit(small).trees_)
+
+
+def test_fit_resumable_fingerprint_restarts_on_new_data(tmp_path):
+    """After ingest_append the checkpoint no longer matches the training
+    set: the stale chunks must be discarded, not grafted onto new data."""
+    x, y = make_classification(160, 6, 2, seed=31)
+    blocks, _, _ = make_party_views(x, y, M, overlap=1.0, seed=31)
+    fed = Federation(parties=M, n_bins=8)
+    fed.ingest([ArraySource(b) for b in blocks])
+    p = ForestParams(n_estimators=3, max_depth=3, n_bins=8, seed=6)
+    ck = str(tmp_path / "ck")
+    fed.fit_resumable(p, ck, trees_per_chunk=1)
+
+    extra = [PartyBlock(name=b.name, x=b.x[:30] + 0.5,
+                        ids=np.array([f"e{i}" for i in range(30)]),
+                        y=None if b.y is None else b.y[:30],
+                        feature_ids=b.feature_ids)
+             for b in blocks]
+    fed.ingest_append([ArraySource(b) for b in extra])
+    resumed = fed.fit_resumable(p, ck, trees_per_chunk=1)
+    ref = fed.fit(p)                              # from scratch on the union
+    _trees_equal(resumed.trees_, ref.trees_)
+
+
+# -------------------------------------------------------------- data products
+def test_data_product_schema_validated_loudly():
+    rng = np.random.default_rng(0)
+    b = PartyBlock("bank", rng.normal(size=(20, 3)),
+                   ids=[f"u{i}" for i in range(20)])
+    good = DataProduct("bank", ArraySource(b), ProductSchema.of(b))
+    assert sum(c.n_samples for c in good.iter_chunks(7)) == 20
+    for schema, msg in [
+            (ProductSchema(n_features=4), "declared 4 features"),
+            (ProductSchema(n_features=3, feature_dtype="float32"),
+             "declared feature dtype"),
+            (ProductSchema(n_features=3, id_kind="int"), "ID contract"),
+            (ProductSchema(n_features=3, has_labels=True), "has_labels"),
+            (ProductSchema(n_features=3, feature_ids=(0, 1, 2)),
+             "feature_ids")]:
+        with pytest.raises(ValueError, match=msg):
+            list(DataProduct("bank", ArraySource(b), schema).iter_chunks(7))
+    with pytest.raises(ValueError, match="carry the product name"):
+        list(DataProduct("ecom", ArraySource(b),
+                         ProductSchema.of(b)).iter_chunks(7))
+
+
+def test_data_product_versions_must_advance():
+    x, y = make_classification(90, 6, 2, seed=41)
+    blocks, _, _ = make_party_views(x, y, M, overlap=1.0, seed=41)
+    fed = Federation(parties=M, n_bins=8)
+    fed.ingest([DataProduct(b.name, ArraySource(b), ProductSchema.of(b),
+                            version=1) for b in blocks])
+    stale = DataProduct(blocks[0].name, ArraySource(PartyBlock(
+        name=blocks[0].name, x=blocks[0].x[:5],
+        ids=np.array([f"v{i}" for i in range(5)]),
+        y=None if blocks[0].y is None else blocks[0].y[:5],
+        feature_ids=blocks[0].feature_ids)),
+        ProductSchema.of(blocks[0]), version=1)
+    with pytest.raises(ValueError, match="does not advance"):
+        fed.ingest_append([stale])
+    with pytest.raises(ValueError, match="cannot add new ones"):
+        fed.ingest_append([ArraySource(PartyBlock(
+            "stranger", np.zeros((2, 1)), ids=["a", "b"]))])
+
+
+# -------------------------------------------------------------- distributed
+@pytest.fixture(scope="module")
+def dist_fed():
+    fed = Federation(parties=M, substrate="distributed", n_bins=8,
+                     round_timeout=60.0,
+                     retry=RetryPolicy(attempts=2, base=0.05, seed=0))
+    yield fed
+    fed.close()
+
+
+def test_distributed_streamed_ingest_and_append_bit_identity(dist_fed,
+                                                             tmp_path):
+    """Party workers scan + bin their own chunks process-side; the
+    partition the coordinator assembles — and the append re-assembly —
+    equal the in-memory build exactly."""
+    x, y = make_classification(140, 6, 2, seed=51)
+    blocks, _, _ = make_party_views(x, y, M, overlap=0.85, seed=51)
+    ref, ref_y, _ = partition_from_blocks(blocks, n_bins=8)
+    sources = [ChunkedCSVSource(b.to_csv(str(tmp_path / f"{b.name}.csv")),
+                                name=b.name)
+               for b in blocks]
+    part = dist_fed.ingest(sources, chunk_rows=19)
+    _parts_equal(part, ref)
+    np.testing.assert_array_equal(dist_fed._y, ref_y)
+
+    extra = [PartyBlock(name=b.name, x=b.x[:25] * 2.0,
+                        ids=np.array([f"x{i}" for i in range(25)]),
+                        y=None if b.y is None else b.y[:25],
+                        feature_ids=b.feature_ids)
+             for b in blocks]
+    union = [PartyBlock(name=a.name, x=np.concatenate([a.x, b.x]),
+                        ids=np.concatenate([a.ids, b.ids]),
+                        y=None if a.y is None else np.concatenate([a.y, b.y]),
+                        feature_ids=a.feature_ids)
+             for a, b in zip(blocks, extra)]
+    ref2, ref2_y, _ = partition_from_blocks(union, n_bins=8)
+    part2 = dist_fed.ingest_append([DataProduct(b.name, ArraySource(b),
+                                                ProductSchema.of(b),
+                                                version=2) for b in extra])
+    _parts_equal(part2, ref2)
+    np.testing.assert_array_equal(dist_fed._y, ref2_y)
+
+    p = ForestParams(n_estimators=2, max_depth=3, n_bins=8, seed=1)
+    sim = Federation(parties=M, n_bins=8)
+    sim.ingest(union)
+    _trees_equal(dist_fed.fit(p).trees_, sim.fit(p).trees_)
