@@ -135,7 +135,8 @@ class FederatedForest:
     # -------------------------------------------------------------- predict
     def _run_predict(self, x_test: np.ndarray, program, *shared) -> np.ndarray:
         from repro.federation import programs
-        assert self.trees_ is not None, "fit first"
+        if self.trees_ is None:
+            raise ValueError("model is not fitted: call fit() first")
         xb_parts = self.partition_.bin_test(np.asarray(x_test))
         with self._sub().context():
             out = self._sub().compile(program)(self.trees_,
@@ -158,7 +159,8 @@ class FederatedForest:
     def leaf_table(self, pad_multiple: int = 8):
         """Live-leaf compaction plan of the fitted forest (serving/plan.py)."""
         from repro.serving import plan
-        assert self.trees_ is not None, "fit first"
+        if self.trees_ is None:
+            raise ValueError("model is not fitted: call fit() first")
         return plan.build_leaf_table(self.trees_, self.params,
                                      pad_multiple=pad_multiple)
 
@@ -170,7 +172,8 @@ class FederatedForest:
         heap columns are dropped from the psum and the vote) — the serving
         engine's kernel, exposed here for parity tests and ad-hoc use."""
         from repro.federation import programs
-        assert self.trees_ is not None, "fit first"
+        if self.trees_ is None:
+            raise ValueError("model is not fitted: call fit() first")
         lt = leaf_table if leaf_table is not None else self.leaf_table()
         return self._run_predict(
             x_test,
@@ -277,7 +280,8 @@ class FederatedForest:
         """Split-count importance over encoded feature ids (privacy-aware:
         ``view='party:i'`` restricts to party i's own splits — what each
         participant may legitimately compute locally)."""
-        assert self.trees_ is not None
+        if self.trees_ is None:
+            raise ValueError("model is not fitted: call fit() first")
         trees = jax.tree.map(np.asarray, self.trees_)
         counts = np.zeros(self.partition_.n_features, np.float64)
         gids = trees.split_gid[0]             # master view (T, nn)
@@ -293,7 +297,8 @@ class FederatedForest:
 
     def master_tree_view(self):
         """The complete model T as the master stores it (owner + encoded id)."""
-        assert self.trees_ is not None
+        if self.trees_ is None:
+            raise ValueError("model is not fitted: call fit() first")
         t = jax.tree.map(lambda a: np.asarray(a[0]), self.trees_)
         return {"owner": t.owner, "split_gid": t.split_gid,
                 "is_leaf": t.is_leaf, "leaf_stats": t.leaf_stats}

@@ -180,7 +180,8 @@ def assign_features(n_features: int, n_parties: int, *, contiguous: bool = True,
     """
     ids = np.arange(n_features)
     if not contiguous:
-        assert rng is not None
+        if rng is None:
+            raise ValueError("contiguous=False requires an rng for the feature permutation")
         ids = rng.permutation(ids)
     return [np.sort(a) for a in np.array_split(ids, n_parties)]
 

@@ -27,6 +27,7 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.analysis import runtime as egress_runtime
 from repro.core import crypto
 
 
@@ -86,6 +87,10 @@ class PartyBlock:
                 raise ValueError(
                     f"party {self.name!r}: {len(self.feature_ids)} "
                     f"feature_ids for {self.x.shape[1]} columns")
+        # tag the final raw arrays for the runtime egress guard (no-op
+        # unless REPRO_EGRESS_GUARD=1): these buffers and their views must
+        # never reach Channel.send unsanitized
+        egress_runtime.taint_block(self)
 
     @property
     def n_samples(self) -> int:

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.analysis import runtime as egress_runtime
 from repro.core import crypto, impurity, tree
 from repro.core.party import VerticalPartition, _pad_groups
 from repro.core.partyblock import (CSVSource, DataSource, PartyBlock,
@@ -711,9 +712,17 @@ def distributed_ingest(coord: Coordinator, sources, n_bins: int, *,
     if len(sources) != coord.n_parties:
         raise ValueError(f"expected {coord.n_parties} party sources, got "
                          f"{len(sources)}")
-    metas = [coord.request(w, {"op": "load_block",
-                               "source": _source_spec(s)})
-             for w, s in enumerate(sources)]
+    # Provisioning is the one sanctioned raw flow: each in-memory source is
+    # shipped to ITS OWN party's worker process — the same trust domain, a
+    # stand-in for the worker reading its silo's storage directly (CSV
+    # sources ship as paths and are read worker-side).  The static
+    # suppression below and the runtime allow_egress() are a deliberate
+    # pair; see analysis/policy.py.
+    with egress_runtime.allow_egress(
+            "provisioning: a party's own block to its own worker"):
+        metas = [coord.request(w, {"op": "load_block",  # egress: ok(provisioning — party's own raw block to its own worker process, same trust domain)
+                                   "source": _source_spec(s)})
+                 for w, s in enumerate(sources)]
     names = [m["name"] for m in metas]
     if len(set(names)) != len(names):
         raise ValueError(f"party names must be unique, got {names}")
@@ -841,12 +850,17 @@ def distributed_streaming_ingest(coord: Coordinator, sources, n_bins: int, *,
     if len(sources) != coord.n_parties:
         raise ValueError(f"expected {coord.n_parties} party sources, got "
                          f"{len(sources)}")
-    metas = [coord.request(w, {"op": "stream_scan",
-                               "source": _stream_source_spec(s),
-                               "chunk_rows": int(chunk_rows),
-                               "capacity": int(capacity), "salt": salt,
-                               "append": bool(append)})
-             for w, s in enumerate(sources)]
+    # provisioning: same sanctioned raw flow as distributed_ingest — each
+    # party's own chunked source goes to its own worker (in-memory array
+    # sources ship raw; CSV sources ship as paths, read worker-side)
+    with egress_runtime.allow_egress(
+            "provisioning: a party's own chunked source to its own worker"):
+        metas = [coord.request(w, {"op": "stream_scan",  # egress: ok(provisioning — party's own raw chunk source to its own worker process, same trust domain)
+                                   "source": _stream_source_spec(s),
+                                   "chunk_rows": int(chunk_rows),
+                                   "capacity": int(capacity), "salt": salt,
+                                   "append": bool(append)})
+                 for w, s in enumerate(sources)]
     names = [m["name"] for m in metas]
     if len(set(names)) != len(names):
         raise ValueError(f"party names must be unique, got {names}")

@@ -22,7 +22,11 @@ across the network.  This module is that wire layer, kept deliberately small:
 
 Nothing here imports jax or the protocol code — the coordinator/worker logic
 that gives these messages meaning lives in federation/distributed.py and
-federation/party_worker.py.
+federation/party_worker.py.  The one policy hook is the privacy egress
+guard (`repro.analysis.runtime`, numpy-only): when ``REPRO_EGRESS_GUARD=1``
+every outgoing payload is checked against the raw-array taint registry
+before encoding, so a raw feature/ID/label buffer can never be framed —
+the runtime twin of the static `python -m repro.analysis` pass.
 """
 from __future__ import annotations
 
@@ -34,6 +38,8 @@ from typing import Any, Callable
 
 import msgpack
 import numpy as np
+
+from repro.analysis import runtime as egress_guard
 
 _LEN = struct.Struct(">I")
 _MAX_FRAME = 1 << 31  # sanity bound; a larger frame means a corrupt stream
@@ -153,6 +159,8 @@ class Channel:
         self._rbuf = b""
 
     def send(self, msg: dict) -> None:
+        egress_guard.check_egress(
+            msg, context=f"Channel.send(party={self.party})")
         try:
             self.sock.sendall(pack(msg))
         except (OSError, ValueError) as e:

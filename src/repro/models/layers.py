@@ -59,7 +59,8 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
     if sections is None:
         ang = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,dh/2)
     else:
-        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        if positions.ndim != 3:
+            raise ValueError(f"M-RoPE needs (3, B, S) positions, got ndim={positions.ndim}")
         parts = []
         start = 0
         for i, sec in enumerate(sections):

@@ -469,7 +469,8 @@ class ForestServer(ModelServer):
     def from_forest(cls, forest, **kw) -> "ForestServer":
         """Wrap a fitted core.forest.FederatedForest (binning + decode ride
         along, so the server accepts raw feature rows)."""
-        assert forest.trees_ is not None, "fit first"
+        if forest.trees_ is None:
+            raise ValueError("forest is not fitted: call fit() first")
         kw.setdefault("partition", forest.partition_)
         kw.setdefault("decode", forest._decode)
         return cls(forest.trees_, forest.params, **kw)

@@ -73,7 +73,11 @@ class FleetOverloadError(RuntimeError):
 class TokenBucket:
     """Token-bucket rate limiter (tokens = rows; refill = rate per second).
 
-    ``clock`` is injectable so tests drive time deterministically."""
+    ``clock`` is injectable so tests drive time deterministically.
+
+    Lock discipline (checked by repro.analysis rules/locks):
+        _lock: _tokens, _t
+    """
 
     def __init__(self, rate: float, capacity: float | None = None,
                  clock: Callable[[], float] = time.monotonic):
@@ -197,7 +201,13 @@ class ServingFleet:
     Concurrency: ``submit``/``submit_parties`` are thread-safe (the cell
     queues are multi-producer).  ``drain``, ``kill_cell`` and
     ``check_health`` are coordinator operations — call them from one
-    thread (drain itself fans out over the cells internally)."""
+    thread (drain itself fans out over the cells internally).
+
+    Lock discipline (checked by repro.analysis rules/locks):
+        _lock: _requests, _by_cell_rid, _next_rid, accepted_count, shed_counts
+        unsynchronized (coordinator thread only, per the contract above): dead_letters, rerouted_count
+        unsynchronized (coordinator thread only): ring, _last_snapshot
+    """
 
     def __init__(self, servers, *, max_queue_rows: int = 8192,
                  rate_limit_rows_per_s: float | None = None,
@@ -239,14 +249,16 @@ class ServingFleet:
         FleetOverloadError instead of enqueueing when overloaded."""
         if self.limiter is not None and n_rows > 0 \
                 and not self.limiter.try_acquire(n_rows):
-            self.shed_counts["rate_limit"] += 1
+            with self._lock:        # submit is multi-producer
+                self.shed_counts["rate_limit"] += 1
             raise FleetOverloadError(
                 f"rate limit: {n_rows} rows rejected at the front door",
                 reason="rate_limit")
         cell = self.cells[self.ring.route(key)]
         depth = cell.queue.pending_rows()
         if depth + n_rows > cell.max_queue_rows:
-            self.shed_counts["queue_depth"] += 1
+            with self._lock:
+                self.shed_counts["queue_depth"] += 1
             raise FleetOverloadError(
                 f"cell {cell.name} bulkhead full: {depth} pending rows "
                 f"+ {n_rows} > {cell.max_queue_rows}",

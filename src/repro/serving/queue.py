@@ -80,7 +80,15 @@ class _Pending:
 
 
 class RequestQueue:
-    """FIFO queue of prediction requests over one serving engine."""
+    """FIFO queue of prediction requests over one serving engine.
+
+    ``submit`` is multi-producer thread-safe; ``drain`` is the single
+    pump thread by contract (the `_Pending` objects it mutates in place —
+    sent/done/out row spans — are only ever touched by that one drainer).
+
+    Lock discipline (checked by repro.analysis rules/locks):
+        _lock: _pending, _next_id, request_stats
+    """
 
     def __init__(self, server: ModelServer, max_wave_rows: int | None = None):
         self.server = server

@@ -40,6 +40,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.analysis import runtime as egress_runtime
 from repro.core import binning, crypto
 from repro.core.party import VerticalPartition, _pad_groups
 from repro.core.partyblock import feature_groups
@@ -61,6 +62,15 @@ class SourceScan:
     feature_ids: np.ndarray | None
     feature_names: tuple[str, ...] | None
     version: int | None = None       # DataProduct version, if any
+
+    def __post_init__(self) -> None:
+        # tag the retained raw arrays for the runtime egress guard (no-op
+        # unless REPRO_EGRESS_GUARD=1); `hashes` is wire-safe by policy
+        egress_runtime.taint(
+            self.ids, f"SourceScan[{self.name!r}].ids (raw sample IDs)")
+        if self.y is not None:
+            egress_runtime.taint(
+                self.y, f"SourceScan[{self.name!r}].y (raw labels)")
 
 
 def scan_source(source, *, chunk_rows: int = DEFAULT_CHUNK_ROWS,

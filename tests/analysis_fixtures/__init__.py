@@ -1,0 +1,3 @@
+# Fixture modules for the privacy-egress analyzer tests.  These files are
+# PARSED by the analyzer (never imported), so they reference PartyBlock-like
+# objects and channels freely without any runtime dependencies.

@@ -1,0 +1,18 @@
+"""CLEAN: everything on the wire passed a registered sanitizer or is
+protocol metadata — must produce zero findings."""
+from repro.core import binning, crypto
+
+
+def ok(ch, block, n_bins, salt):
+    xb, edges = binning.bin_dataset(block.x, n_bins)
+    ch.send({"op": "binned",
+             "hashes": crypto.hash_ids(block.ids, salt=salt),
+             "xb": xb, "boundaries": edges,
+             "name": block.name, "n_features": block.n_features,
+             "has_y": block.y is not None})
+
+
+def ok_reassigned(ch, block, salt):
+    ids = block.ids
+    ids = crypto.hash_ids(ids, salt=salt)   # strong update cleans `ids`
+    ch.send({"op": "hashes", "hashes": ids})

@@ -1,0 +1,65 @@
+"""Fixture for the companion rule passes: bare asserts, nondeterminism,
+and lock-discipline violations (this module is named in the tests'
+policy override as a lock module and a determinism zone)."""
+import threading
+import time
+
+import numpy as np
+
+
+def shape_check(x):
+    assert x.ndim == 2, "must be 2d"          # asserts: dies under -O
+    return x
+
+
+def noisy():
+    a = np.random.rand(3)                     # determinism: legacy RNG
+    rng = np.random.default_rng()             # determinism: unseeded
+    return a, rng
+
+
+def register_program(name):
+    def deco(fn):
+        return fn
+    return deco
+
+
+@register_program("toy")
+def protocol_body(comm, payload):
+    t = time.monotonic()                      # determinism: time in a zone
+    return t
+
+
+class SharedCounter:
+    """Toy threaded counter.
+
+    Lock discipline (checked by repro.analysis rules/locks):
+        _lock: count, events
+        unsynchronized (single writer): label
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self.events = []
+        self.label = ""
+        self.undocumented = 0
+
+    def good(self, n):
+        with self._lock:
+            self.count += n
+            self.events.append(n)
+        self.label = "ok"                     # documented unsynchronized
+
+    def bad(self, n):
+        self.count += n                       # locks: outside _lock
+        self.events.append(n)                 # locks: outside _lock
+        self.undocumented += 1                # locks: not in the map
+
+
+class UndocumentedLocker:
+    """Owns a lock but documents no discipline."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0

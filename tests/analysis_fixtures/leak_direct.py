@@ -1,0 +1,5 @@
+"""LEAK: raw features sent straight to the wire."""
+
+
+def leak(ch, block):
+    ch.send({"op": "dump", "x": block.x})

@@ -1,0 +1,14 @@
+"""LEAK: raw IDs forwarded through a local helper — the finding must fire
+at the call site via the helper's param→sink summary."""
+
+
+def _forward(ch, payload):
+    ch.send({"op": "relay", "data": payload})
+
+
+def _hop(ch, payload):
+    _forward(ch, payload)       # two-deep chain exercises the fixpoint
+
+
+def leak(ch, block):
+    _hop(ch, block.ids)

@@ -1,0 +1,9 @@
+"""LEAK: features are properly binned, but raw IDs ride in the same
+message unsanitized — partial sanitization must still be flagged."""
+from repro.core import binning
+
+
+def leak(ch, block, n_bins):
+    xb, edges = binning.bin_dataset(block.x, n_bins)
+    ch.send({"op": "binned", "xb": xb, "boundaries": edges,
+             "ids": block.ids})

@@ -1,0 +1,16 @@
+"""LEAK: raw values smuggled inside nested containers — a dict buried in a
+list, and a NamedTuple field."""
+import collections
+
+Wrapped = collections.namedtuple("Wrapped", "meta blob")
+
+
+def leak_dict(ch, block):
+    payload = {"meta": block.n_features, "blob": block.y}
+    envelope = {"op": "stats", "parts": [payload]}
+    ch.send(envelope)
+
+
+def leak_namedtuple(ch, block):
+    msg = Wrapped(meta=1, blob=block.x)
+    ch.send({"op": "wrapped", "body": msg})

@@ -1,0 +1,11 @@
+"""Suppression fixture: a justified raw send is silenced by
+`# egress: ok(reason)`; an empty-reason suppression silences nothing and
+is itself reported."""
+
+
+def provision(ch, block):
+    ch.send({"op": "load", "x": block.x})  # egress: ok(fixture: provisioning a party's own worker)
+
+
+def bad_suppression(ch, block):
+    ch.send({"op": "load", "ids": block.ids})  # egress: ok()

@@ -3,3 +3,9 @@ import os
 # Smoke tests and benches must see the single real CPU device. The 512-device
 # dry-run sets XLA_FLAGS itself in launch/dryrun.py __main__ (never here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Run the whole suite with the privacy egress guard armed: every
+# Channel.send (coordinator AND spawned party workers, which inherit the
+# env) refuses raw-tagged arrays.  Normal traffic must be bit-identical
+# with the guard on — that's part of what the suite proves.
+os.environ.setdefault("REPRO_EGRESS_GUARD", "1")

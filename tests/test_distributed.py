@@ -240,3 +240,76 @@ def test_degraded_serving_refused_without_optin():
             server.serve(x[:10])
     finally:
         fed.close()
+
+
+# ----------------------------------------------------------- privacy egress
+def _tcp_channel_pair():
+    """A real loopback TCP Channel pair (Channel sets TCP_NODELAY, so a
+    unix socketpair won't do)."""
+    import socket
+
+    from repro.federation.transport import Channel
+    lst = socket.socket()
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+    a = socket.create_connection(lst.getsockname(), timeout=5)
+    b, _ = lst.accept()
+    lst.close()
+    return Channel(a, party=0), Channel(b, party=0)
+
+
+def test_egress_guard_blocks_raw_send_and_names_the_key():
+    """Deliberately ship a raw-tagged feature block / raw IDs through a
+    real Channel: the wire refuses, the error names the payload key path
+    and the taint label.  Sanitized protocol traffic on the same channel
+    flows untouched."""
+    from repro.analysis import runtime as egress_rt
+    from repro.analysis.runtime import PrivacyViolationError
+    from repro.core.partyblock import PartyBlock
+
+    assert egress_rt.enabled(), "conftest must arm REPRO_EGRESS_GUARD"
+    tx, rx = _tcp_channel_pair()
+    try:
+        block = PartyBlock(name="leaky", x=np.arange(10.0).reshape(5, 2),
+                           ids=np.arange(5), y=np.zeros(5, np.int64))
+        with pytest.raises(PrivacyViolationError) as ei:
+            tx.send({"op": "leak", "payload": {"x": block.x}})
+        assert ei.value.path == "msg['payload']['x']"
+        assert "raw features" in str(ei.value)
+        assert "'leaky'" in str(ei.value)
+        with pytest.raises(PrivacyViolationError) as ei:
+            tx.send({"op": "leak", "ids": block.ids})
+        assert ei.value.path == "msg['ids']"
+        assert "raw sample IDs" in str(ei.value)
+        # a column view shares the raw buffer — still blocked
+        with pytest.raises(PrivacyViolationError):
+            tx.send({"op": "leak", "col": block.x[:, 0]})
+        # the sanctioned protocol message is untouched and round-trips
+        hashes = block.hashed_ids("salt0")
+        tx.send({"op": "hashes", "hashes": hashes})
+        got = rx.recv(timeout=10)
+        np.testing.assert_array_equal(np.asarray(got["hashes"]), hashes)
+    finally:
+        tx.sock.close()
+        rx.sock.close()
+
+
+def test_guarded_traffic_is_bit_identical(dist_fed):
+    """The egress guard is armed for the whole suite (conftest): this pins
+    down explicitly that guarded distributed fit/predict/ingest produce
+    bit-identical results to the in-process simulation — the guard only
+    ever blocks, it never perturbs."""
+    from repro.analysis import runtime as egress_rt
+
+    assert egress_rt.enabled()
+    x, y = make_classification(90, 6, 2, seed=7)
+    p = ForestParams(n_estimators=2, max_depth=3, n_bins=8, seed=4)
+    sim = Federation(parties=M, n_bins=8)
+    sim.ingest(x, y)
+    ref = sim.fit(p)
+    dist_fed.ingest(x, y)
+    model = dist_fed.fit(p)
+    _trees_equal(ref.trees_, model.trees_)
+    np.testing.assert_array_equal(
+        np.asarray(dist_fed.predict(model, x[:25])),
+        np.asarray(sim.predict(ref, x[:25])))
