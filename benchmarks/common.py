@@ -6,6 +6,10 @@ import time
 
 import numpy as np
 
+# Every emit() row, as a dict — the machine-readable mirror of the CSV
+# stream, dumped by `python -m benchmarks.run --json-out FILE`.
+RECORDS: list[dict] = []
+
 
 def bench_rounds() -> int:
     """Paper uses 40 rounds for the Z-tests; default lower for CI speed."""
@@ -24,5 +28,18 @@ def timeit(fn, *args, repeat: int = 3):
 
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
-    """One CSV row: name, us_per_call, derived."""
+    """One CSV row: name, us_per_call, derived.  Also recorded in RECORDS
+    (derived's ``k=v|k=v`` pairs parsed into a dict, non-numeric values
+    kept as strings) for the --json-out summary."""
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+    fields = {}
+    for pair in derived.split("|"):
+        if "=" not in pair:
+            continue
+        k, v = pair.split("=", 1)
+        try:
+            fields[k] = float(v)
+        except ValueError:
+            fields[k] = v
+    RECORDS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                    "derived": fields})

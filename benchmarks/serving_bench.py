@@ -37,7 +37,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import RECORDS, emit
 from repro.core import ForestParams, fit_federated_forest
 from repro.data import make_classification
 from repro.serving import (FleetOverloadError, ForestServer, RequestQueue,
@@ -299,7 +299,14 @@ def run(mode: str = "all") -> list[dict]:
 
 if __name__ == "__main__":
     import argparse
+    import json
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("all", "sync", "async", "fleet"),
                     default="all")
-    run(ap.parse_args().mode)
+    ap.add_argument("--json-out", default=None, metavar="FILE",
+                    help="dump the emitted records as a JSON summary")
+    args = ap.parse_args()
+    run(args.mode)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"mode": args.mode, "records": RECORDS}, f, indent=1)

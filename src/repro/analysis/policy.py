@@ -68,8 +68,15 @@ SANITIZERS = frozenset({
 # the call site (method or function).  `send`/`sendall` are the socket
 # layer, `pack` is the msgpack codec entry, `request`/`_send`/`exchange`
 # are the coordinator RPC helpers that forward payloads to Channel.send.
+# The observability verbs (`span`/`event`/`begin`/`observe` and the trace
+# exporters) are wire-sensitive too: spans cross processes in the telemetry
+# op and land in exported artifacts, so a tainted argument to any of them
+# is raw data leaving the party exactly like a socket send — the linter
+# proves span/metric payloads stay metadata-only.
 SINKS = frozenset({"send", "sendall", "pack", "request", "_send",
-                   "exchange"})
+                   "exchange",
+                   "span", "event", "begin", "observe",
+                   "export_jsonl", "write_chrome_trace", "chrome_trace"})
 
 # Builtins/uti calls whose result never carries payload data even when fed
 # tainted arguments (sizes, types, formatting of scalars).

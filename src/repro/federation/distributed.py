@@ -61,6 +61,7 @@ from repro.core.partyblock import (CSVSource, DataSource, PartyBlock,
 from repro.core.tree import PartyTree
 from repro.core.types import PARTY_AXIS, ForestParams
 from repro.federation import transport
+from repro.observability import trace as tracing
 from repro.federation.transport import (CircuitBreaker, PartyDead,
                                         PartyTimeout, PartyUnavailableError,
                                         ProtocolError, RetryPolicy)
@@ -90,6 +91,11 @@ class Comm:
 
     def _round(self, kind: str, arrays) -> list:
         arrays = [np.asarray(a) for a in arrays]
+        with tracing.TRACER.span(f"coll.{kind}", category="comm",
+                                 seq=self._seq):
+            return self._round_inner(kind, arrays)
+
+    def _round_inner(self, kind: str, arrays) -> list:
         self.channel.send({"op": "coll", "run": self.run_id,
                            "seq": self._seq, "kind": kind, "data": arrays})
         while True:
@@ -183,6 +189,8 @@ def _fit_tree(comm: Comm, xb_np, xb_dev, feat_gid_dev, fmask, wstats,
     split_gid = np.full((nn,), -1, np.int32)
 
     for d in range(params.max_depth + 1):
+        level_span = tracing.TRACER.begin("fit.level", category="compute",
+                                          level=d)
         off, width = params.level_slice(d)
         cap = min(width, n, params.frontier_cap or width)
         last = d == params.max_depth
@@ -194,6 +202,7 @@ def _fit_tree(comm: Comm, xb_np, xb_dev, feat_gid_dev, fmask, wstats,
             nstats, cnt = (np.asarray(r) for r in res)
             leaf_stats[off:off + width] = nstats
             is_leaf[off:off + width] = cnt > 0
+            tracing.TRACER.finish(level_span)
             break
         nstats, cnt, g_loc, gid_loc, bin_loc, floc_loc = (
             np.asarray(r) for r in res)
@@ -226,6 +235,7 @@ def _fit_tree(comm: Comm, xb_np, xb_dev, feat_gid_dev, fmask, wstats,
         go_r = comm.psum(go_r_loc)
         advance = in_lvl & do_split[nil_c]
         node = np.where(advance, 2 * node + 1 + go_r, node).astype(np.int32)
+        tracing.TRACER.finish(level_span)
 
     return PartyTree(is_leaf, leaf_stats, has_split, split_floc, split_bin,
                      owner, split_gid)
@@ -546,41 +556,47 @@ class Coordinator:
             for p in active:
                 self._send(p, msgs[p])
             while True:
-                got = {p: self._recv_run(p, rid) for p in active}
-                ops = {m["op"] for m in got.values()}
-                if "error" in ops:
-                    bad = next(p for p, m in got.items()
-                               if m["op"] == "error")
-                    self._abort(rid, active)
-                    m = got[bad]
-                    raise RuntimeError(
-                        f"party {bad} failed in {msgs[bad]['name']!r}: "
-                        f"{m.get('message')}\n{m.get('traceback', '')}")
-                if ops == {"result"}:
-                    return {p: m["data"] for p, m in got.items()}
-                if ops != {"coll"}:
-                    self._abort(rid, active)
-                    raise ProtocolError(f"mixed protocol messages {ops}")
-                seqs = {m["seq"] for m in got.values()}
-                kinds = {m["kind"] for m in got.values()}
-                if len(seqs) != 1 or len(kinds) != 1:
-                    self._abort(rid, active)
-                    raise ProtocolError(
-                        f"desynchronized collective (seq {seqs}, "
-                        f"kind {kinds})")
-                kind, seq = kinds.pop(), seqs.pop()
-                n_arr = len(got[active[0]]["data"])
-                combined = []
-                for j in range(n_arr):
-                    stack = np.stack([np.asarray(got[p]["data"][j])
-                                      for p in active])
-                    combined.append(
-                        stack if kind == "gather"
-                        else np.add.reduce(stack, axis=0, dtype=stack.dtype))
-                reply = {"op": "coll_result", "run": rid, "seq": seq,
-                         "data": combined}
-                for p in active:
-                    self._send(p, reply)
+                with tracing.TRACER.span("round", category="comm",
+                                         rid=rid) as rspan:
+                    got = {p: self._recv_run(p, rid) for p in active}
+                    ops = {m["op"] for m in got.values()}
+                    if "error" in ops:
+                        bad = next(p for p, m in got.items()
+                                   if m["op"] == "error")
+                        self._abort(rid, active)
+                        m = got[bad]
+                        raise RuntimeError(
+                            f"party {bad} failed in {msgs[bad]['name']!r}: "
+                            f"{m.get('message')}\n{m.get('traceback', '')}")
+                    if ops == {"result"}:
+                        rspan.set(kind="result")
+                        return {p: m["data"] for p, m in got.items()}
+                    if ops != {"coll"}:
+                        self._abort(rid, active)
+                        raise ProtocolError(
+                            f"mixed protocol messages {ops}")
+                    seqs = {m["seq"] for m in got.values()}
+                    kinds = {m["kind"] for m in got.values()}
+                    if len(seqs) != 1 or len(kinds) != 1:
+                        self._abort(rid, active)
+                        raise ProtocolError(
+                            f"desynchronized collective (seq {seqs}, "
+                            f"kind {kinds})")
+                    kind, seq = kinds.pop(), seqs.pop()
+                    rspan.set(kind=kind, seq=seq)
+                    n_arr = len(got[active[0]]["data"])
+                    combined = []
+                    for j in range(n_arr):
+                        stack = np.stack([np.asarray(got[p]["data"][j])
+                                          for p in active])
+                        combined.append(
+                            stack if kind == "gather"
+                            else np.add.reduce(stack, axis=0,
+                                               dtype=stack.dtype))
+                    reply = {"op": "coll_result", "run": rid, "seq": seq,
+                             "data": combined}
+                    for p in active:
+                        self._send(p, reply)
         except PartyUnavailableError as e:
             # abort EVERY active party, including the one the failure is
             # attributed to: a slow-but-alive party must learn its run was
@@ -603,8 +619,12 @@ class Coordinator:
             for p in active:
                 self.breaker.allow(p)         # raises CircuitOpenError
             rid = self.next_run_id()
+            msgs = build_msgs(rid)
+            name = msgs[active[0]]["name"] if active else "?"
             try:
-                out = self.run_once(rid, build_msgs(rid), active)
+                with tracing.TRACER.span(f"run.{name}", category="host",
+                                         rid=rid, attempt=attempt):
+                    out = self.run_once(rid, msgs, active)
             except PartyUnavailableError as e:
                 last = e
                 for p in (e.parties or active):
@@ -1063,6 +1083,32 @@ class DistributedSubstrate:
 
     def health(self, timeout: float = 2.0):
         return self.coordinator.health(timeout=timeout)
+
+    def collect_telemetry(self) -> dict[int, dict]:
+        """Pull each live party's buffered spans + metric snapshot into this
+        process: worker spans join the session tracer (so one export covers
+        the whole federation) and party metrics merge under a ``party<i>.``
+        prefix.  Returns the raw per-party replies.  No-op (empty dict) if
+        the coordinator was never started."""
+        from repro.observability import registry as _registry
+        if self._coord is None:
+            return {}
+        coord = self._coord
+        out: dict[int, dict] = {}
+        for p in range(self.n_parties):
+            if p in coord._dead or p not in coord.channels:
+                continue
+            try:
+                r = coord.request(p, {"op": "telemetry"})
+            except (PartyUnavailableError, RuntimeError):
+                continue
+            for s in r.get("spans") or ():
+                tracing.TRACER.adopt(s)
+            _registry.REGISTRY.merge(r.get("metrics") or {},
+                                     prefix=f"party{p}.")
+            out[p] = {"spans": len(r.get("spans") or ()),
+                      "metrics": len(r.get("metrics") or ())}
+        return out
 
     def chaos(self, party: int, mode: str, seconds: float = 0.0):
         self.coordinator.chaos(party, mode, seconds)

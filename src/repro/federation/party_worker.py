@@ -18,6 +18,15 @@ protocol messages until shutdown:
   * ``chaos``    — arm a one-shot injected fault for the NEXT run message:
     ``drop_run`` (swallow it), ``delay_run`` (sleep first), ``die``
     (hard process exit).  Exists for the fault-injection tests.
+  * ``telemetry`` — the observability rollup: reply with this process's
+    buffered trace spans and metric snapshot (plain metadata — numbers,
+    names, ids — never raw arrays), so party-side telemetry aggregates at
+    the coordinator without new wire types.
+
+Run messages carry the coordinator's span context under ``_trace``; the
+worker attaches it so its spans (op execution, per-level fit compute,
+collective waits, injected chaos delays) parent under the coordinator's
+span and the whole distributed fit is one connected trace.
 
 Workers are daemon processes: if the coordinator dies, so do they.
 """
@@ -30,9 +39,12 @@ import traceback
 import numpy as np
 
 from repro.federation import transport
+from repro.observability import registry as telemetry
+from repro.observability import trace as tracing
 
 
 def worker_main(host: str, port: int, index: int) -> None:
+    tracing.TRACER.process = f"party{index}"
     ch = transport.connect(host, port)
     ch.send({"op": "hello", "party": index})
     binds: dict[int, dict] = {}
@@ -58,16 +70,25 @@ def worker_main(host: str, port: int, index: int) -> None:
             binds[msg["bind"]] = msg.get("args") or {}
             ch.send({"op": "bind_ack", "nonce": msg.get("nonce")})
         elif op == "run":
-            if chaos is not None:
-                mode, secs = chaos["mode"], chaos["seconds"]
-                chaos = None                        # one-shot
-                if mode == "drop_run":
-                    continue
-                if mode == "die":
-                    os._exit(1)
-                if mode == "delay_run":
-                    time.sleep(secs)
-            _handle_run(ch, msg, index, binds)
+            with tracing.TRACER.attach(msg.get("_trace")):
+                if chaos is not None:
+                    mode, secs = chaos["mode"], chaos["seconds"]
+                    chaos = None                    # one-shot
+                    if mode == "drop_run":
+                        continue
+                    if mode == "die":
+                        os._exit(1)
+                    if mode == "delay_run":
+                        with tracing.TRACER.span("chaos.delay",
+                                                 category="host",
+                                                 seconds=secs):
+                            time.sleep(secs)
+                _handle_run(ch, msg, index, binds)
+        elif op == "telemetry":
+            ch.send({"op": "telemetry", "party": index,
+                     "nonce": msg.get("nonce"),
+                     "spans": tracing.TRACER.drain(),
+                     "metrics": telemetry.REGISTRY.snapshot()})
         elif op in ("load_block", "hash_block_ids", "bin_block"):
             block = _handle_ingest(ch, msg, block, index)
         elif op in ("stream_scan", "stream_bin"):
@@ -89,7 +110,9 @@ def _handle_run(ch, msg, index, binds) -> None:
             args[int(pos)] = val
         comm = distributed.Comm(ch, rid, msg["party_index"],
                                 msg["n_parties"])
-        out = body(comm, msg.get("payload") or {}, *args)
+        with tracing.TRACER.span(f"worker.{msg['name']}",
+                                 category="compute", rid=rid, party=index):
+            out = body(comm, msg.get("payload") or {}, *args)
         ch.send({"op": "result", "run": rid, "data": out})
     except distributed.RunAborted:
         pass                                        # superseded: back to idle

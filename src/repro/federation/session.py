@@ -37,6 +37,7 @@ from repro.core.types import ForestParams
 from repro.federation import programs
 from repro.federation.estimator import Estimator
 from repro.federation.substrate import Substrate, resolve_substrate
+from repro.observability import trace as tracing
 
 
 def _token_matches(old: tuple, new: tuple) -> bool:
@@ -280,7 +281,11 @@ class Federation:
         partition, y = self._training_set(partition, y)
         self._check_binning(spec, partition)
         model = self._model_for(self._apply_session(spec), **model_kw)
-        return model.fit(partition, y)
+        with tracing.TRACER.span(f"fit.{type(spec).__name__}",
+                                 category="host",
+                                 substrate=self.substrate.name,
+                                 parties=self.parties):
+            return model.fit(partition, y)
 
     def fit_resumable(self, spec: ForestParams, ckpt_dir: str, *,
                       trees_per_chunk: int = 2,
@@ -369,10 +374,12 @@ class Federation:
         LeafTable plan, rebuilt automatically when ``model.trees_`` changed
         since the plan was made (fit_resumable continuations, refits)."""
         from repro.core.forest import FederatedForest
-        if isinstance(model, FederatedForest):
-            return model.predict_compact(x_test,
-                                         leaf_table=self._plan_for(model))
-        return model.predict(x_test)
+        with tracing.TRACER.span("predict", category="host",
+                                 family=type(model).__name__):
+            if isinstance(model, FederatedForest):
+                return model.predict_compact(x_test,
+                                             leaf_table=self._plan_for(model))
+            return model.predict(x_test)
 
     def _plan_for(self, model):
         """The model's LeafTable — cached until its trees_ is swapped out."""
@@ -658,6 +665,35 @@ class Federation:
         programs.forest_predict_program for the knobs)."""
         return programs.forest_predict_program(
             self.substrate, self._apply_session(spec), **kw)
+
+    # ---------------------------------------------------------- observability
+    def collect_telemetry(self) -> dict:
+        """Roll party-side telemetry up into this process (distributed
+        substrate: each live worker's trace spans join the session tracer
+        and its metrics merge under a ``party<i>.`` prefix — metadata only,
+        the rollup op carries no arrays).  In-process substrates have
+        nothing to collect.  Returns ``{party: {"spans": n, "metrics": n}}``."""
+        collect = getattr(self.substrate, "collect_telemetry", None)
+        return collect() if collect is not None else {}
+
+    def trace_spans(self) -> list[dict]:
+        """Buffered trace spans (coordinator + any collected party spans)."""
+        self.collect_telemetry()
+        return tracing.TRACER.spans()
+
+    def export_trace(self, jsonl_path: str,
+                     chrome_path: str | None = None) -> int:
+        """Collect + export the session trace; returns the span count.
+
+        ``jsonl_path`` gets one span per line (the ``repro-trace`` CLI
+        input); ``chrome_path`` optionally gets a Chrome trace-event file
+        for chrome://tracing / Perfetto."""
+        from repro.observability import export
+        spans = self.trace_spans()
+        export.export_jsonl(spans, jsonl_path)
+        if chrome_path is not None:
+            export.write_chrome_trace(spans, chrome_path)
+        return len(spans)
 
     # -------------------------------------------------------------- lifecycle
     def close(self) -> None:

@@ -15,18 +15,27 @@ across the network.  This module is that wire layer, kept deliberately small:
   * **RetryPolicy** — jittered exponential backoff between attempts; the
     jitter stream is seeded so fault-injection tests observe deterministic
     sleep schedules (the sleeper is injectable for the same reason).
-  * **CircuitBreaker** — per-party consecutive-failure counter; after
-    ``threshold`` consecutive failures the circuit opens and further calls
-    fail fast with :class:`CircuitOpenError` until ``reset`` (success closes
-    it again below the threshold).
+  * **CircuitBreaker** — per-party consecutive-failure breaker with an
+    observer seam: after ``threshold`` consecutive failures the circuit
+    opens and further calls fail fast with :class:`CircuitOpenError`.  A
+    recorded success (or ``reset``) closes it; with an optional
+    ``cooldown_s`` an open circuit half-opens after the cooldown and lets
+    probe calls through.  Every state flip is counted in the telemetry
+    registry, traced as an instant span, and reported to the
+    ``on_transition`` callback.
 
 Nothing here imports jax or the protocol code — the coordinator/worker logic
 that gives these messages meaning lives in federation/distributed.py and
-federation/party_worker.py.  The one policy hook is the privacy egress
-guard (`repro.analysis.runtime`, numpy-only): when ``REPRO_EGRESS_GUARD=1``
-every outgoing payload is checked against the raw-array taint registry
-before encoding, so a raw feature/ID/label buffer can never be framed —
-the runtime twin of the static `python -m repro.analysis` pass.
+federation/party_worker.py.  Two policy hooks ride along: the privacy
+egress guard (`repro.analysis.runtime`, numpy-only): when
+``REPRO_EGRESS_GUARD=1`` every outgoing payload is checked against the
+raw-array taint registry before encoding, so a raw feature/ID/label buffer
+can never be framed — the runtime twin of the static
+`python -m repro.analysis` pass; and observability (`repro.observability`,
+stdlib-only): when tracing is active, ``Channel.send`` stamps the current
+span context onto the frame under the ``_trace`` key (receivers that don't
+trace ignore it; with tracing disabled the key is never added, so wire
+bytes are identical to uninstrumented code).
 """
 from __future__ import annotations
 
@@ -40,6 +49,8 @@ import msgpack
 import numpy as np
 
 from repro.analysis import runtime as egress_guard
+from repro.observability import registry as telemetry
+from repro.observability import trace as tracing
 
 _LEN = struct.Struct(">I")
 _MAX_FRAME = 1 << 31  # sanity bound; a larger frame means a corrupt stream
@@ -159,6 +170,9 @@ class Channel:
         self._rbuf = b""
 
     def send(self, msg: dict) -> None:
+        ctx = tracing.current_context()
+        if ctx is not None and "_trace" not in msg:
+            msg = dict(msg, _trace=ctx)
         egress_guard.check_egress(
             msg, context=f"Channel.send(party={self.party})")
         try:
@@ -266,46 +280,114 @@ class RetryPolicy:
     def backoff(self, attempt: int) -> None:
         d = self.delay(attempt)
         self.slept.append(d)
-        self.sleeper(d)
+        telemetry.REGISTRY.counter("transport.retries").inc()
+        telemetry.REGISTRY.histogram("transport.backoff_s").observe(d)
+        with tracing.TRACER.span("retry.backoff", category="host",
+                                 attempt=attempt, delay_s=d):
+            self.sleeper(d)
 
 
 class CircuitBreaker:
-    """Per-party consecutive-failure breaker.
+    """Per-party consecutive-failure breaker with half-open probes.
 
     ``record_failure`` K times in a row opens party i's circuit; ``allow``
     then raises :class:`CircuitOpenError` so callers fail fast instead of
     burning a timeout budget per request on a party that is plainly down.
     A recorded success closes the circuit again (the coordinator records one
-    after every completed round-trip)."""
+    after every completed round-trip).
 
-    def __init__(self, threshold: int = 3):
+    With ``cooldown_s=None`` (the default) an open circuit stays open until
+    a success or ``reset`` — the pre-existing behavior.  With a cooldown,
+    ``allow`` transitions open→half_open once ``cooldown_s`` has elapsed on
+    the (injectable) ``clock`` and lets the probe through; the probe's
+    success closes the circuit, its failure re-opens it immediately.
+
+    Observer seam: every state flip calls ``on_transition(party, old,
+    new)``, increments ``transport.breaker.<new>`` in the telemetry
+    registry, records an instant trace span, and is appended to the
+    bounded ``transitions`` log.
+    """
+
+    _MAX_LOG = 256
+
+    def __init__(self, threshold: int = 3, *,
+                 cooldown_s: float | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 on_transition: Callable[[int, str, str], None] | None = None):
         if threshold < 1:
             raise ValueError("breaker threshold must be >= 1")
+        if cooldown_s is not None and cooldown_s < 0:
+            raise ValueError("breaker cooldown_s must be >= 0")
         self.threshold = int(threshold)
+        self.cooldown_s = cooldown_s
+        self.clock = clock
+        self.on_transition = on_transition
         self._fails: dict[int, int] = {}
+        self._state: dict[int, str] = {}
+        self._opened_at: dict[int, float] = {}
+        self.transitions: list[tuple[int, str, str]] = []
+
+    def state(self, party: int) -> str:
+        return self._state.get(party, "closed")
+
+    def _transition(self, party: int, new: str) -> None:
+        old = self.state(party)
+        if old == new:
+            return
+        if new == "closed":
+            self._state.pop(party, None)
+        else:
+            self._state[party] = new
+        if new == "open":
+            self._opened_at[party] = self.clock()
+        else:
+            self._opened_at.pop(party, None)
+        if len(self.transitions) < self._MAX_LOG:
+            self.transitions.append((party, old, new))
+        telemetry.REGISTRY.counter(f"transport.breaker.{new}").inc()
+        tracing.TRACER.event("breaker", category="host", party=party,
+                             from_state=old, to_state=new)
+        if self.on_transition is not None:
+            self.on_transition(party, old, new)
 
     def record_failure(self, party: int) -> None:
         self._fails[party] = self._fails.get(party, 0) + 1
+        if self.state(party) == "half_open":
+            # a failed probe re-opens immediately, whatever the count
+            self._transition(party, "open")
+        elif self._fails[party] >= self.threshold:
+            self._transition(party, "open")
 
     def record_success(self, party: int) -> None:
         self._fails.pop(party, None)
+        self._transition(party, "closed")
 
     def is_open(self, party: int) -> bool:
-        return self._fails.get(party, 0) >= self.threshold
+        return self.state(party) == "open"
 
     def open_parties(self) -> tuple[int, ...]:
-        return tuple(sorted(p for p, n in self._fails.items()
-                            if n >= self.threshold))
+        return tuple(sorted(p for p in self._state
+                            if self._state[p] == "open"))
 
     def allow(self, party: int) -> None:
-        if self.is_open(party):
-            raise CircuitOpenError(
-                f"party {party}: circuit open after "
-                f"{self._fails[party]} consecutive failures",
-                parties=(party,))
+        if not self.is_open(party):
+            return
+        if self.cooldown_s is not None:
+            opened = self._opened_at.get(party)
+            if opened is not None and \
+                    self.clock() - opened >= self.cooldown_s:
+                self._transition(party, "half_open")
+                return  # probe allowed
+        raise CircuitOpenError(
+            f"party {party}: circuit open after "
+            f"{self._fails.get(party, self.threshold)} consecutive failures",
+            parties=(party,))
 
     def reset(self, party: int | None = None) -> None:
+        parties = tuple(self._state) if party is None else (party,)
         if party is None:
             self._fails.clear()
         else:
             self._fails.pop(party, None)
+        for p in parties:
+            self._transition(p, "closed")

@@ -44,7 +44,16 @@ def main() -> None:
     ap.add_argument("--rows", type=int, default=300)
     ap.add_argument("--features", type=int, default=9)
     ap.add_argument("--round-timeout", type=float, default=60.0)
+    ap.add_argument("--trace-out", default=None, metavar="DIR",
+                    help="enable tracing and write spans.jsonl + trace.json "
+                         "(Chrome trace) for the whole fit/serve run")
     args = ap.parse_args()
+
+    if args.trace_out:
+        # before the Federation spawns workers, so they inherit the env
+        os.environ["REPRO_TRACE"] = "1"
+        from repro.observability import TRACER
+        TRACER.enable()
 
     # feature subsampling so some trees' split paths avoid some party
     # entirely — those are the trees degraded serving can answer from
@@ -82,6 +91,11 @@ def main() -> None:
         assert np.array_equal(got, want), "served predictions diverged"
         print(f"serve: {len(xt)} rows, bit-identical to simulation")
 
+        if args.trace_out:
+            # pull worker spans now, while all parties are still alive —
+            # the chaos kill below takes the victim's buffer with it
+            fed.collect_telemetry()
+
         # ---- injected failure: kill the party whose features the most
         # trees avoid (those trees keep answering exactly)
         survivors = {pi: surviving_trees(model.trees_, [pi]).size
@@ -107,6 +121,22 @@ def main() -> None:
             "degraded predictions diverged from the surviving-tree forest"
         print(f"fault: party {victim} killed -> degraded serving from "
               f"{stats['n_trees']}/{args.trees} surviving trees, exact")
+
+        if args.trace_out:
+            import json
+            os.makedirs(args.trace_out, exist_ok=True)
+            jsonl = os.path.join(args.trace_out, "spans.jsonl")
+            chrome = os.path.join(args.trace_out, "trace.json")
+            n = fed.export_trace(jsonl, chrome)
+            with open(chrome) as f:
+                doc = json.load(f)
+            events = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+            procs = {s["proc"] for s in fed.trace_spans()}
+            assert n > 0 and len(events) == n, (n, len(events))
+            assert any(p.startswith("party") for p in procs), \
+                f"no worker spans crossed the wire: {sorted(procs)}"
+            print(f"trace: {n} spans from {len(procs)} processes -> "
+                  f"{jsonl} + {chrome}")
         print("ALL OK")
     finally:
         fed.close()

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
 from typing import Any, Callable
 
@@ -53,6 +54,9 @@ from repro.core.types import ForestParams
 from repro.federation import programs
 from repro.federation.substrate import ShardedSubstrate, SimulatedSubstrate
 from repro.federation.transport import PartyUnavailableError
+from repro.observability import registry as telemetry
+from repro.observability import trace as tracing
+from repro.observability.export import jax_profile
 from repro.serving import plan
 from repro.serving.config import ServeConfig
 
@@ -95,6 +99,9 @@ class InFlightWave:
     # extra per-wave facts recorded by the dispatch path (e.g. the degraded
     # serving flag + dead-party list) — merged into the wave_stats entry
     info: dict | None = None
+    # open trace span (tracing.TRACER.begin), finished at collect; None
+    # when tracing is disabled
+    span: Any = None
 
 
 class ModelServer:
@@ -136,6 +143,16 @@ class ModelServer:
         self._request_fp = n_features_per_party
         self._n_inflight = 0
         self._wave_info = None
+        # opt-in jax.profiler hook: set a directory (or export
+        # REPRO_JAX_PROFILE=<dir>) and serve_binned wraps its wave pump in
+        # a profiler trace
+        self.profile_dir = os.environ.get("REPRO_JAX_PROFILE") or None
+        # telemetry handles bound once — the per-wave path must not pay a
+        # registry name lookup per wave
+        self._m_waves = telemetry.REGISTRY.counter("serving.waves")
+        self._m_rows = telemetry.REGISTRY.counter("serving.rows")
+        self._m_latency = telemetry.REGISTRY.histogram(
+            "serving.wave_latency_s")
 
     @staticmethod
     def _check_buckets(buckets) -> tuple[int, ...]:
@@ -199,6 +216,7 @@ class ModelServer:
         buckets = self._check_buckets(buckets)
         self._exec = {b: e for b, e in self._exec.items() if b in buckets}
         self.buckets = buckets
+        telemetry.REGISTRY.counter("serving.autotune_epochs").inc()
         return self
 
     def _fp(self) -> int:
@@ -257,13 +275,15 @@ class ModelServer:
         compiled = self._executable(bucket)
         if n < bucket:
             xb_parts = np.pad(xb_parts, ((0, 0), (0, bucket - n), (0, 0)))
+        span = tracing.TRACER.begin("serve.wave", category="compute",
+                                    bucket=bucket, rows=n)
         t0 = time.perf_counter()
         self._wave_info = None
         out = self._execute(compiled, jnp.asarray(xb_parts))
         self._n_inflight += 1
         return InFlightWave(out=out, bucket=bucket, n_rows=n, t0=t0,
                             inflight_at_dispatch=self._n_inflight,
-                            info=self._wave_info)
+                            info=self._wave_info, span=span)
 
     def _execute(self, compiled, xbt):
         """Launch one compiled wave — the failure seam.  ForestServer
@@ -279,7 +299,11 @@ class ModelServer:
         time (``inflight_at_dispatch`` records the ring depth at launch)."""
         out = jax.block_until_ready(wave.out)
         dt = time.perf_counter() - wave.t0
+        tracing.TRACER.finish(wave.span)
         self._n_inflight -= 1
+        self._m_waves.inc()
+        self._m_rows.inc(wave.n_rows)
+        self._m_latency.observe(dt)
         entry = {
             "bucket": wave.bucket, "n_rows": wave.n_rows,
             "t0": wave.t0, "latency_s": dt,
@@ -354,12 +378,13 @@ class ModelServer:
         ring: collections.deque[InFlightWave] = collections.deque()
         outs, lo = [], 0
         try:
-            while lo < n or ring:
-                while lo < n and len(ring) < k:       # fill the ring
-                    hi = min(lo + self.buckets[-1], n)
-                    ring.append(self.dispatch_wave(xb_parts[:, lo:hi]))
-                    lo = hi
-                outs.append(self.collect(ring.popleft()))  # backpressure
+            with jax_profile(self.profile_dir):
+                while lo < n or ring:
+                    while lo < n and len(ring) < k:   # fill the ring
+                        hi = min(lo + self.buckets[-1], n)
+                        ring.append(self.dispatch_wave(xb_parts[:, lo:hi]))
+                        lo = hi
+                    outs.append(self.collect(ring.popleft()))  # backpressure
         except BaseException:
             self.abandon(ring)                        # keep inflight honest
             raise

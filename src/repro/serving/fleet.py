@@ -52,6 +52,8 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.federation.transport import PartyUnavailableError
+from repro.observability import registry as telemetry
+from repro.observability import trace as tracing
 from repro.serving import metrics as fleet_metrics
 from repro.serving.engine import ModelServer
 from repro.serving.queue import PoisonedWaveError, RequestQueue
@@ -321,22 +323,41 @@ class ServingFleet:
         drained and its requests re-route.  Every accepted request ends in
         the results dict or the dead-letter sink — never silently lost."""
         results: dict[int, np.ndarray] = {}
-        for _ in range(8 * max(1, len(self.cells))):     # progress-bounded
-            active = [c for c in self.cells.values()
-                      if c.state == "up" and c.queue.pending_requests()]
-            if not active:
-                break
-            if len(active) == 1:
-                outcomes = {active[0].name: self._drain_cell(active[0])}
-            else:
-                with ThreadPoolExecutor(max_workers=len(active)) as pool:
-                    futs = {c.name: pool.submit(self._drain_cell, c)
-                            for c in active}
-                    outcomes = {n: f.result() for n, f in futs.items()}
-            for name, outcome in outcomes.items():
-                self._absorb(self.cells[name], outcome, results)
+        with tracing.TRACER.span("fleet.drain", category="host",
+                                 cells=len(self.cells)):
+            for _ in range(8 * max(1, len(self.cells))):  # progress-bounded
+                active = [c for c in self.cells.values()
+                          if c.state == "up" and c.queue.pending_requests()]
+                if not active:
+                    break
+                if len(active) == 1:
+                    outcomes = {active[0].name: self._drain_cell(active[0])}
+                else:
+                    with ThreadPoolExecutor(max_workers=len(active)) as pool:
+                        futs = {c.name: pool.submit(self._drain_cell, c)
+                                for c in active}
+                        outcomes = {n: f.result() for n, f in futs.items()}
+                for name, outcome in outcomes.items():
+                    self._absorb(self.cells[name], outcome, results)
+        self._publish_telemetry()
         self._maybe_snapshot()
         return results
+
+    def _publish_telemetry(self) -> None:
+        """Push fleet-level counters into the shared telemetry registry
+        (coordinator thread, after a drain pass — reads under ``_lock``
+        where the discipline map requires it)."""
+        reg = telemetry.REGISTRY
+        with self._lock:
+            accepted = self.accepted_count
+            shed = dict(self.shed_counts)
+        reg.gauge("fleet.accepted").set(accepted)
+        for reason, n in shed.items():
+            reg.gauge(f"fleet.shed.{reason}").set(n)
+        reg.gauge("fleet.dead_letters").set(len(self.dead_letters))
+        reg.gauge("fleet.rerouted").set(self.rerouted_count)
+        reg.gauge("fleet.cells_up").set(
+            sum(1 for c in self.cells.values() if c.state == "up"))
 
     @staticmethod
     def _drain_cell(cell: _Cell):

@@ -33,6 +33,8 @@ import time
 
 import numpy as np
 
+from repro.observability import registry as telemetry
+from repro.observability import trace as tracing
 from repro.serving.engine import ModelServer
 
 
@@ -102,6 +104,11 @@ class RequestQueue:
         self._lock = threading.Lock()
         # bounded, like the server's wave_stats: no per-request leak
         self.request_stats: collections.deque = collections.deque(maxlen=4096)
+        # bound once; _retire runs per drained request
+        self._m_requests = telemetry.REGISTRY.counter("serving.requests")
+        self._m_req_latency = telemetry.REGISTRY.histogram(
+            "serving.request_latency_s")
+        self._m_depth = telemetry.REGISTRY.gauge("serving.queue_depth_rows")
 
     def submit(self, x: np.ndarray, *, binned: bool = False) -> int:
         """Enqueue one request; returns its id (resolved by drain()).
@@ -214,9 +221,12 @@ class RequestQueue:
                     if p.out is None:   # zero-row request: engine dtype
                         p.out = self.server.empty_result()
                     results[p.rid] = p.out
+                    latency = time.perf_counter() - p.t_submit
                     self.request_stats.append({
                         "rid": p.rid, "rows": int(p.done),
-                        "latency_s": time.perf_counter() - p.t_submit})
+                        "latency_s": latency})
+                    self._m_requests.inc()
+                    self._m_req_latency.observe(latency)
                 else:
                     still.append(p)
             self._pending = still
@@ -237,6 +247,7 @@ class RequestQueue:
         results: dict[int, np.ndarray] = {}
         ring: collections.deque = collections.deque()
         k = self.server.max_inflight
+        drain_span = tracing.TRACER.begin("queue.drain", category="host")
         try:
             while True:
                 while len(ring) < k:                # phase 1: fill
@@ -282,4 +293,9 @@ class RequestQueue:
                 # their answers ride out on the error
                 err.partial = dict(results)
             raise
+        finally:
+            if drain_span is not None:
+                drain_span.set(requests=len(results))
+                tracing.TRACER.finish(drain_span)
+            self._m_depth.set(self.pending_rows())
         return results

@@ -19,12 +19,14 @@ from repro.streaming.ingest import (PartyStream, SourceScan, append_streams,
 from repro.streaming.sketch import (DEFAULT_CAPACITY, FeatureSketches,
                                     QuantileSketch)
 from repro.streaming.sources import (DEFAULT_CHUNK_ROWS, ArraySource,
-                                     ChunkedCSVSource, ChunkedSource,
-                                     DataProduct, ProductSchema, as_chunked,
+                                     ChunkedCSVSource, ChunkedParquetSource,
+                                     ChunkedSource, DataProduct,
+                                     ProductSchema, as_chunked,
                                      is_chunked_sequence)
 
 __all__ = [
-    "ArraySource", "ChunkedCSVSource", "ChunkedSource", "DataProduct",
+    "ArraySource", "ChunkedCSVSource", "ChunkedParquetSource",
+    "ChunkedSource", "DataProduct",
     "DEFAULT_CAPACITY", "DEFAULT_CHUNK_ROWS", "FeatureSketches",
     "PartyStream", "ProductSchema", "QuantileSketch", "SourceScan",
     "append_streams", "as_chunked", "assemble_streams", "is_chunked_sequence",

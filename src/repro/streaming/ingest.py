@@ -42,6 +42,8 @@ import numpy as np
 
 from repro.analysis import runtime as egress_runtime
 from repro.core import binning, crypto
+from repro.observability import registry as telemetry
+from repro.observability import trace as tracing
 from repro.core.party import VerticalPartition, _pad_groups
 from repro.core.partyblock import feature_groups
 from repro.streaming.sketch import DEFAULT_CAPACITY, FeatureSketches
@@ -112,8 +114,13 @@ def scan_source(source, *, chunk_rows: int = DEFAULT_CHUNK_ROWS,
         hash_parts.append(crypto.hash_ids(chunk.ids, salt=salt))
         if has_y:
             y_parts.append(chunk.y)
+        telemetry.REGISTRY.counter("streaming.chunks_scanned").inc()
+        telemetry.REGISTRY.counter("streaming.rows_scanned").inc(
+            int(chunk.n_samples))
     if name is None:
         raise ValueError(f"{source!r}: source yielded no chunks")
+    tracing.TRACER.event("stream.scan", category="host", party=name,
+                         rows=sum(int(a.size) for a in ids_parts))
     return SourceScan(
         name=name, n_rows=sum(int(a.size) for a in ids_parts),
         ids=_concat(ids_parts), hashes=_concat(hash_parts),
@@ -251,6 +258,9 @@ def party_stream_bin(stream: PartyStream, positions, n_bins: int):
             xb_i[sel[kept]] = binning.apply_bins(x_c, edges)
         off += chunk.n_samples
     y_i = s.y[pos] if s.y is not None else None
+    telemetry.REGISTRY.counter("streaming.rows_binned").inc(int(pos.size))
+    tracing.TRACER.event("stream.bin", category="host", party=s.name,
+                         rows=int(pos.size))
     return xb_i, edges, y_i
 
 

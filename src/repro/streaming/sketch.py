@@ -39,6 +39,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import binning
+from repro.observability import registry as telemetry
 
 DEFAULT_CAPACITY = 2048
 
@@ -113,6 +114,7 @@ class QuantileSketch:
             self.levels[l + 1] = np.concatenate(
                 [self.levels[l + 1], promoted])
             self.err += 2 ** l
+            telemetry.REGISTRY.counter("streaming.sketch_compactions").inc()
             l += 1
 
     # --------------------------------------------------------------- query

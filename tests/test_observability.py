@@ -1,0 +1,409 @@
+"""Observability subsystem: tracing, telemetry registry, breaker
+transitions, export/report — and the zero-cost-when-disabled contract.
+
+The load-bearing guarantees under test:
+
+  * **Propagation** — one distributed 3-party fit yields ONE connected
+    trace: every worker span carries the coordinator's trace id and hangs
+    off a coordinator parent span; retry backoff spans carry the
+    reproducible jittered schedule.
+  * **Bit-identity** — enabling tracing changes no protocol or serving
+    output (and the disabled path never adds the ``_trace`` key to wire
+    messages at all).
+  * **Breaker observer seam** — open -> half_open -> closed transitions
+    are recorded in order, both with an injected clock and under the
+    workers' deterministic chaos hook.
+  * **Metadata-only payloads** — span attrs reject array-shaped values at
+    runtime (the static egress linter proves the same at the call sites).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import ForestParams
+from repro.data import make_classification
+from repro.federation import Federation, distributed
+from repro.federation.distributed import DistributedSubstrate
+from repro.federation.transport import (CircuitBreaker, CircuitOpenError,
+                                        PartyTimeout, RetryPolicy)
+from repro.observability import (REGISTRY, TRACER, Registry, Tracer,
+                                 chrome_trace, critical_path, export_jsonl,
+                                 format_report, read_jsonl)
+from repro.serving import ServeConfig
+
+M = 3
+
+
+@pytest.fixture()
+def tracer():
+    """A private, enabled Tracer — global TRACER state stays untouched."""
+    t = Tracer()
+    t.enable()
+    yield t
+    t.disable()
+    t.reset()
+
+
+@pytest.fixture()
+def armed_tracer():
+    """The GLOBAL tracer, enabled (with the env the workers inherit) and
+    guaranteed clean again afterwards — for end-to-end propagation tests."""
+    os.environ["REPRO_TRACE"] = "1"
+    TRACER.enable()
+    TRACER.reset()
+    yield TRACER
+    TRACER.disable()
+    TRACER.reset()
+    os.environ.pop("REPRO_TRACE", None)
+
+
+# ------------------------------------------------------------------- tracer
+def test_disabled_tracer_is_noop_and_allocation_free():
+    t = Tracer()
+    s1 = t.span("a", category="host")
+    s2 = t.span("b", category="comm", level=3)
+    assert s1 is s2                      # shared no-op singleton
+    with s1:
+        assert t.current_context() is None
+    assert t.begin("c") is None
+    t.finish(None)                       # no-op, no error
+    t.event("d")
+    assert t.spans() == []
+
+
+def test_span_nesting_parent_chain_and_single_trace(tracer):
+    with tracer.span("root", category="host"):
+        with tracer.span("mid", category="comm", level=1):
+            with tracer.span("leaf", category="compute"):
+                pass
+        tracer.event("blip", category="host")
+    spans = {s["name"]: s for s in tracer.spans()}
+    assert len(spans) == 4
+    assert spans["root"]["parent"] is None
+    assert spans["mid"]["parent"] == spans["root"]["sid"]
+    assert spans["leaf"]["parent"] == spans["mid"]["sid"]
+    assert spans["blip"]["parent"] == spans["root"]["sid"]
+    assert len({s["tid"] for s in spans.values()}) == 1
+    assert spans["mid"]["attrs"]["level"] == 1
+    assert spans["leaf"]["dur"] <= spans["mid"]["dur"] * 1.5 + 1e-3
+
+
+def test_attach_adopts_remote_parent_even_when_env_disabled():
+    """A worker with tracing off locally still records under a propagated
+    remote context — that's how coordinator-armed tracing reaches workers."""
+    t = Tracer()
+    assert not t.enabled
+    ctx = {"tid": "t9", "sid": "coord/9"}
+    with t.attach(ctx):
+        with t.span("remote_child", category="compute"):
+            pass
+    with t.attach(None):                 # no context: stays off
+        with t.span("dropped"):
+            pass
+    spans = t.spans()
+    assert [s["name"] for s in spans] == ["remote_child"]
+    assert spans[0]["tid"] == "t9"
+    assert spans[0]["parent"] == "coord/9"
+
+
+def test_span_attrs_reject_payload_shaped_values(tracer):
+    with pytest.raises(TypeError, match="metadata"):
+        with tracer.span("bad", rows=np.arange(5)):
+            pass
+    with pytest.raises(TypeError, match="metadata"):
+        tracer.event("bad2", ids={"a": 1})
+    with pytest.raises(TypeError, match="metadata"):
+        tracer.event("bad3", big=tuple(range(100)))   # past the tuple bound
+    tracer.event("ok", shape=(3, 4), note="fine")     # short tuples pass
+
+
+def test_manual_begin_finish_tolerates_out_of_order(tracer):
+    a = tracer.begin("wave0", category="compute")
+    b = tracer.begin("wave1", category="compute")
+    tracer.finish(a)                     # FIFO finish under a LIFO stack
+    tracer.finish(b)
+    names = [s["name"] for s in tracer.spans()]
+    assert sorted(names) == ["wave0", "wave1"]
+
+
+# ----------------------------------------------------------------- registry
+def test_registry_counter_gauge_histogram_and_names():
+    r = Registry()
+    r.counter("a.hits").inc()
+    r.counter("a.hits").inc(4)
+    r.gauge("a.depth").set(7)
+    h = r.histogram("a.lat")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert r.counter("a.hits").value == 5
+    assert r.gauge("a.depth").value == 7
+    assert h.count == 4 and h.total == 10.0 and h.max == 4.0
+    assert h.quantile(0.5) in (2.0, 3.0)
+    assert set(r.names()) == {"a.hits", "a.depth", "a.lat"}
+    with pytest.raises(ValueError, match="already registered"):
+        r.gauge("a.hits")                # kind collision is loud
+
+
+def test_registry_snapshot_merge_rollup_prefix():
+    worker, coord = Registry(), Registry()
+    worker.counter("rows").inc(10)
+    worker.histogram("lat").observe(0.5)
+    worker.histogram("lat").observe(1.5)
+    coord.merge(worker.snapshot(), prefix="party2.")
+    coord.merge(worker.snapshot(), prefix="party1.")
+    assert coord.counter("party2.rows").value == 10
+    assert coord.counter("party1.rows").value == 10
+    assert coord.histogram("party2.lat").count == 2
+    assert coord.histogram("party2.lat").total == 2.0
+
+
+def test_histogram_merge_accounts_for_unsampled_overflow():
+    src = Registry()
+    h = src.histogram("x", max_samples=4)
+    for v in range(10):
+        h.observe(float(v))
+    dst = Registry()
+    dst.merge(src.snapshot())
+    got = dst.histogram("x")
+    assert got.count == 10               # overflow beyond the 4 kept samples
+    assert got.total == sum(range(10))
+
+
+# ------------------------------------------------------------------ breaker
+def test_breaker_ordered_transitions_with_injected_clock():
+    clock = [0.0]
+    seen = []
+    b = CircuitBreaker(2, cooldown_s=5.0, clock=lambda: clock[0],
+                       on_transition=lambda p, old, new: seen.append(
+                           (p, old, new)))
+    b.record_failure(7)
+    b.allow(7)                           # one failure: still closed
+    b.record_failure(7)
+    with pytest.raises(CircuitOpenError):
+        b.allow(7)                       # threshold hit, cooldown not up
+    clock[0] = 5.0
+    b.allow(7)                           # cooldown elapsed: probe allowed
+    assert b.state(7) == "half_open"
+    b.record_success(7)
+    assert b.state(7) == "closed"
+    assert seen == [(7, "closed", "open"), (7, "open", "half_open"),
+                    (7, "half_open", "closed")]
+    assert b.transitions == seen
+
+
+def test_breaker_failed_probe_reopens_immediately():
+    clock = [0.0]
+    b = CircuitBreaker(3, cooldown_s=1.0, clock=lambda: clock[0])
+    for _ in range(3):
+        b.record_failure(0)
+    clock[0] = 2.0
+    b.allow(0)
+    assert b.state(0) == "half_open"
+    b.record_failure(0)                  # failed probe: no threshold grace
+    assert b.state(0) == "open"
+    with pytest.raises(CircuitOpenError):
+        clock[0] = 2.5                   # cooldown restarts from the reopen
+        b.allow(0)
+
+
+def test_breaker_default_cooldown_none_keeps_legacy_semantics():
+    b = CircuitBreaker(1)
+    b.record_failure(4)
+    with pytest.raises(CircuitOpenError):
+        b.allow(4)                       # stays open forever...
+    b.record_success(4)
+    b.allow(4)                           # ...until an explicit success
+
+
+def test_breaker_half_open_cycle_under_deterministic_chaos():
+    """The satellite regression: a real coordinator round trips the breaker
+    closed->open via a chaos-dropped round, the cooled-down probe half-opens
+    it, and the recovered round closes it — recorded in order."""
+    seen = []
+    policy = RetryPolicy(attempts=1, base=0.01, seed=0,
+                         sleeper=lambda d: None)
+    sub = DistributedSubstrate(2, round_timeout=2.0, retry=policy)
+    try:
+        sub.coordinator.breaker = CircuitBreaker(
+            1, cooldown_s=0.0,
+            on_transition=lambda p, old, new: seen.append((p, old, new)))
+        prog = sub.program(None, 1, 1,
+                           distributed=distributed.toy_affine_spec())
+        x = np.arange(8, dtype=np.int32).reshape(2, 4)
+        want = np.asarray(prog(x, np.int32(3)))   # healthy round first
+        sub.chaos(0, "drop_run")
+        with pytest.raises(PartyTimeout):
+            prog(x, np.int32(3))                  # budget 1: opens party 0
+        got = np.asarray(prog(x, np.int32(3)))    # probe recovers exactly
+        np.testing.assert_array_equal(got, want)
+        flips = [(old, new) for p, old, new in seen if p == 0]
+        assert flips == [("closed", "open"), ("open", "half_open"),
+                         ("half_open", "closed")]
+    finally:
+        sub.shutdown()
+
+
+# ------------------------------------------------------------ export/report
+def _demo_spans(tracer):
+    with tracer.span("fit", category="host"):
+        with tracer.span("run.forest_fit", category="host", rid=1):
+            with tracer.span("coll.sum", category="comm", seq=0):
+                pass
+            with tracer.span("fit.level", category="compute", level=0):
+                pass
+    return tracer.spans()
+
+
+def test_jsonl_roundtrip_and_chrome_trace_shape(tracer, tmp_path):
+    spans = _demo_spans(tracer)
+    path = tmp_path / "spans.jsonl"
+    export_jsonl(spans, str(path))
+    assert read_jsonl(str(path)) == spans
+    doc = chrome_trace(spans)
+    events = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    meta = [e for e in doc["traceEvents"] if e.get("ph") == "M"]
+    assert len(events) == len(spans)
+    assert any(m["name"] == "process_name" for m in meta)
+    assert all(isinstance(e["pid"], int) and e["ts"] >= 0 for e in events)
+    json.dumps(doc)                      # must be a serializable artifact
+
+
+def test_critical_path_and_report_render(tracer):
+    spans = _demo_spans(tracer)
+    summary = critical_path(spans)
+    assert summary["n_spans"] == 4 and summary["n_traces"] == 1
+    assert set(summary["by_category_s"]) == {"host", "comm", "compute"}
+    assert 0 in summary["levels"]
+    text = format_report(spans)
+    for needle in ("comm", "compute", "per-level", "slowest"):
+        assert needle in text
+
+
+# --------------------------------------------- end-to-end propagation oracle
+@pytest.fixture(scope="function")
+def traced_fed(armed_tracer):
+    fed = Federation(parties=M, substrate="distributed", n_bins=8,
+                     round_timeout=60.0,
+                     retry=RetryPolicy(attempts=2, base=0.05, seed=0))
+    yield fed
+    fed.close()
+
+
+def test_distributed_fit_yields_one_connected_trace(traced_fed, tmp_path):
+    x, y = make_classification(120, 6, 2, seed=0)
+    p = ForestParams(n_estimators=2, max_depth=3, n_bins=8, seed=0)
+    traced_fed.ingest(x, y)
+    traced_fed.fit(p)
+    info = traced_fed.collect_telemetry()
+    assert set(info) == set(range(M))
+    assert sum(v["spans"] for v in info.values()) > 0
+    spans = TRACER.spans()
+    fit_roots = [s for s in spans
+                 if s["parent"] is None and s["name"].startswith("fit.")]
+    assert len(fit_roots) == 1
+    tid = fit_roots[0]["tid"]
+    # ONE connected trace: the fit's coordinator rounds and every party's
+    # worker op execution share the trace id, and each span in it hangs
+    # off another span of the same trace (worker roots parent under a
+    # coordinator-minted sid propagated on the wire)
+    trace = [s for s in spans if s["tid"] == tid]
+    worker = [s for s in trace if s["proc"].startswith("party")]
+    assert {s["proc"] for s in worker} == {f"party{i}" for i in range(M)}
+    trace_sids = {s["sid"] for s in trace}
+    coord_sids = {s["sid"] for s in trace
+                  if not s["proc"].startswith("party")}
+    for s in worker:
+        assert s["parent"] is not None and s["parent"] in trace_sids
+    ops = [s for s in worker if s["name"] == "worker.forest_fit"]
+    assert len(ops) == M and all(s["parent"] in coord_sids for s in ops)
+    assert any(s["name"].startswith("coll.") for s in worker)
+    assert any(s["name"] == "round" for s in trace)
+    # exported artifact round-trips with every cross-process span intact
+    out = tmp_path / "spans.jsonl"
+    n = traced_fed.export_trace(str(out), str(tmp_path / "trace.json"))
+    assert n == len(read_jsonl(str(out))) >= len(spans)
+
+
+def test_retry_backoff_spans_carry_reproducible_schedule(armed_tracer):
+    policy = RetryPolicy(attempts=3, base=0.01, seed=7,
+                         sleeper=lambda d: None)
+    sub = DistributedSubstrate(2, round_timeout=2.0, retry=policy)
+    try:
+        prog = sub.program(None, 1, 1,
+                           distributed=distributed.toy_affine_spec())
+        x = np.arange(8, dtype=np.int32).reshape(2, 4)
+        prog(x, np.int32(3))
+        sub.chaos(0, "drop_run")
+        prog(x, np.int32(3))
+    finally:
+        sub.shutdown()
+    backoffs = [s for s in TRACER.spans() if s["name"] == "retry.backoff"]
+    want = RetryPolicy(attempts=3, base=0.01, seed=7).delay(0)
+    assert [s["attrs"]["delay_s"] for s in backoffs] == [want]
+    assert policy.slept == [want]
+    assert backoffs[0]["attrs"]["attempt"] == 0
+
+
+def test_tracing_enabled_is_bit_identical_to_disabled(traced_fed):
+    """The zero-cost contract, output half: the traced distributed fit and
+    served predictions equal the untraced vmap simulation exactly."""
+    x, y = make_classification(120, 6, 2, seed=3)
+    p = ForestParams(n_estimators=3, max_depth=3, n_bins=8,
+                     max_features=0.5, seed=0)
+    sim = Federation(parties=M, n_bins=8)     # untraced in-process reference
+    sim.ingest(x, y)
+    ref = sim.fit(p)
+    traced_fed.ingest(x, y)
+    model = traced_fed.fit(p)
+    import jax
+    for la, lb in zip(jax.tree_util.tree_leaves(ref.trees_),
+                      jax.tree_util.tree_leaves(model.trees_)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    server = traced_fed.serve(model, ServeConfig(buckets=(64,)))
+    np.testing.assert_array_equal(server.serve(x[:40]),
+                                  np.asarray(sim.predict(ref, x[:40])))
+    assert REGISTRY.counter("serving.waves").value > 0
+
+
+def test_disabled_path_sends_bit_identical_wire_bytes():
+    """The zero-cost contract, wire half: with tracing off, Channel.send
+    frames exactly ``pack(msg)`` — no ``_trace`` key, no extra bytes.  With
+    a live span, the context key rides the same frame and the payload is
+    otherwise untouched."""
+    import socket
+
+    from repro.federation import transport
+
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    a = socket.create_connection(srv.getsockname())
+    b, _ = srv.accept()
+    srv.close()
+    try:
+        cha, chb = transport.Channel(a), transport.Channel(b)
+        msg = {"op": "run", "name": "x", "rid": 1}
+        assert TRACER.current_context() is None
+        cha.send(msg)
+        raw = chb._read(4, None)
+        (n,) = transport._LEN.unpack(raw)
+        frame = chb._read(n, None)
+        assert raw + frame == transport.pack(msg)   # byte-identical
+        assert "_trace" not in transport.unpack(frame)
+
+        TRACER.enable()
+        try:
+            with TRACER.span("round", category="comm"):
+                ctx = TRACER.current_context()
+                cha.send(msg)
+            got = chb.recv(timeout=5.0)
+        finally:
+            TRACER.disable()
+            TRACER.reset()
+        assert got.pop("_trace") == ctx
+        assert got == msg
+    finally:
+        a.close()
+        b.close()

@@ -342,3 +342,77 @@ def test_distributed_streamed_ingest_and_append_bit_identity(dist_fed,
     sim = Federation(parties=M, n_bins=8)
     sim.ingest(union)
     _trees_equal(dist_fed.fit(p).trees_, sim.fit(p).trees_)
+
+
+# ------------------------------------------------------------------- parquet
+def _block_to_parquet(b, path):
+    """Write a PartyBlock as parquet with to_csv's column semantics
+    (gf<N> feature headers, id first, label last)."""
+    pa = pytest.importorskip("pyarrow")
+    import pyarrow.parquet as pq
+    names = tuple(f"gf{j}" for j in b.feature_ids) if b.feature_ids is not None \
+        else (b.feature_names or tuple(f"f{j}" for j in range(b.n_features)))
+    cols = {"id": pa.array(np.asarray(b.ids))}
+    for j, name in enumerate(names):
+        cols[name] = pa.array(np.asarray(b.x[:, j], dtype=np.float64))
+    if b.y is not None:
+        cols["label"] = pa.array(np.asarray(b.y))
+    pq.write_table(pa.table(cols), path)
+    return path
+
+
+def test_parquet_source_chunks_match_csv_source(tmp_path):
+    pytest.importorskip("pyarrow")
+    from repro.streaming import ChunkedParquetSource
+    x, y = make_classification(110, 6, 2, seed=23)
+    blocks, _, _ = make_party_views(x, y, M, overlap=0.9, seed=23)
+    b = blocks[0]
+    csv_src = ChunkedCSVSource(b.to_csv(str(tmp_path / "p.csv")), name="p")
+    pq_src = ChunkedParquetSource(
+        _block_to_parquet(b, str(tmp_path / "p.parquet")), name="p")
+    for rows in (7, 1000):
+        cc = list(csv_src.iter_chunks(rows))
+        pc = list(pq_src.iter_chunks(rows))
+        assert len(cc) == len(pc)
+        for a, q in zip(cc, pc):
+            np.testing.assert_array_equal(a.x, q.x)
+            np.testing.assert_array_equal(
+                np.asarray(a.ids, dtype=str), np.asarray(q.ids, dtype=str))
+            if a.y is None:
+                assert q.y is None
+            else:
+                np.testing.assert_array_equal(a.y, q.y)
+            np.testing.assert_array_equal(a.feature_ids, q.feature_ids)
+            assert a.feature_names == q.feature_names
+    with pytest.raises(ValueError, match=">= 1"):
+        next(pq_src.iter_chunks(0))
+
+
+def test_parquet_streamed_ingest_bit_identical_to_in_memory(tmp_path):
+    pytest.importorskip("pyarrow")
+    from repro.streaming import ChunkedParquetSource
+    x, y = make_classification(150, 9, 3, seed=29)
+    blocks, _, _ = make_party_views(x, y, M, overlap=0.8, seed=29)
+    ref, ref_y, _ = partition_from_blocks(blocks, n_bins=8)
+    sources = [ChunkedParquetSource(
+        _block_to_parquet(b, str(tmp_path / f"{b.name}.parquet")),
+        name=b.name) for b in blocks]
+    fed = Federation(parties=M, n_bins=8)
+    part = fed.ingest(sources, chunk_rows=31)
+    _parts_equal(part, ref)
+    np.testing.assert_array_equal(fed._y, ref_y)
+
+
+def test_parquet_empty_file_yields_one_empty_chunk(tmp_path):
+    pa = pytest.importorskip("pyarrow")
+    import pyarrow.parquet as pq
+    from repro.streaming import ChunkedParquetSource
+    t = pa.table({"id": pa.array([], type=pa.int64()),
+                  "gf0": pa.array([], type=pa.float64()),
+                  "gf1": pa.array([], type=pa.float64())})
+    pq.write_table(t, str(tmp_path / "empty.parquet"))
+    chunks = list(ChunkedParquetSource(
+        str(tmp_path / "empty.parquet")).iter_chunks(16))
+    assert len(chunks) == 1
+    assert chunks[0].x.shape == (0, 2) and chunks[0].ids.shape == (0,)
+    np.testing.assert_array_equal(chunks[0].feature_ids, [0, 1])
